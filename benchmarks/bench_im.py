@@ -1,0 +1,58 @@
+"""Paper Sec 5 (Figures 5 & 6): dynamic IM running time + edge-update time."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.applications.im import (
+    DynamicWCGraph,
+    influence_maximization,
+    synthetic_powerlaw_edges,
+)
+
+from .common import csv_row
+
+
+def bench_im_runtime(n_nodes: int = 20_000, m_per_node: int = 4,
+                     ks=(1, 10, 50), n_rr: int = 2000,
+                     weight_dist: str = "exponential", seed: int = 0,
+                     backends=("DIPS", "R-ODSS", "BruteForce")) -> List[dict]:
+    """Fig 5: IM running time for different seed-set sizes k."""
+    rows = []
+    edges = synthetic_powerlaw_edges(n_nodes, m_per_node, weight_dist, seed)
+    for backend in backends:
+        g = DynamicWCGraph.from_edges(n_nodes, edges, backend=backend, seed=seed)
+        for k in ks:
+            seeds, cov, secs = influence_maximization(g, k, n_rr)
+            rows.append({"fig": "fig5", "backend": backend, "k": k,
+                         "n_rr": n_rr, "coverage": cov, "seconds": secs,
+                         "dist": weight_dist})
+            print(csv_row(f"fig5/{backend}/k{k}", secs * 1e6,
+                          f"coverage={cov:.3f};n_rr={n_rr}"))
+    return rows
+
+
+def bench_im_updates(n_nodes: int = 20_000, m_per_node: int = 4,
+                     n_updates: int = 2000, weight_dist: str = "exponential",
+                     seed: int = 0,
+                     backends=("DIPS", "R-ODSS", "BruteForce")) -> List[dict]:
+    """Fig 6: edge insertion+deletion time into the sampling structures."""
+    rows = []
+    edges = synthetic_powerlaw_edges(n_nodes, m_per_node, weight_dist, seed)
+    rng = np.random.default_rng(seed + 1)
+    for backend in backends:
+        g = DynamicWCGraph.from_edges(n_nodes, edges, backend=backend, seed=seed)
+        ops = n_updates if backend != "R-ODSS" else max(50, n_updates // 20)
+        picks = [edges[i] for i in rng.integers(0, len(edges), ops)]
+        t0 = time.perf_counter()
+        for u, v, w in picks:
+            g.delete_edge(u, v)
+            g.insert_edge(u, v, w)
+        dt = (time.perf_counter() - t0) / (2 * ops)
+        rows.append({"fig": "fig6", "backend": backend,
+                     "update_us": dt * 1e6, "dist": weight_dist})
+        print(csv_row(f"fig6/{backend}", dt * 1e6, f"dist={weight_dist}"))
+    return rows

@@ -1,0 +1,151 @@
+"""Paper experiment reproductions: Figures 1-4 + Table 1 (Sec 4).
+
+Default sizes are scaled for a single-core CI container; ``--full`` runs
+paper-scale n.  Every function prints ``name,us_per_call,derived`` rows and
+returns structured records for EXPERIMENTS.md generation.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import max_abs_error
+from repro.core.pps import PPSInstance
+
+from .common import DISTRIBUTIONS, METHODS, csv_row, make_items, time_queries, time_updates
+
+
+# ---------------------------- Fig 1: correctness ------------------------------
+
+def bench_correctness(n: int = 10_000, updates: int = 1000,
+                      repeat_grid=(1_000, 10_000, 100_000),
+                      dist: str = "lognormal", seed: int = 0) -> List[dict]:
+    """Max |phat - p| vs query repeats after a 500-insert/500-delete churn."""
+    rows = []
+    rng = np.random.default_rng(seed)
+    for name, ctor in METHODS.items():
+        items = make_items(dist, n, seed)
+        idx = ctor(dict(items), 1.0, seed)
+        gen = DISTRIBUTIONS[dist]
+        for i in range(updates // 2):
+            idx.insert(("u", i), float(gen(rng, 1)[0]))
+        for i in range(updates // 2):
+            idx.delete(("u", i))
+        counts: Dict = {}
+        done = 0
+        inst = PPSInstance(dict(items), c=1.0)
+        for target in repeat_grid:
+            while done < target:
+                for k in idx.query(rng):
+                    counts[k] = counts.get(k, 0) + 1
+                done += 1
+            err = max_abs_error(inst, counts, done)
+            rows.append({"fig": "fig1", "method": name, "repeats": done,
+                         "max_abs_error": err})
+            print(csv_row(f"fig1/{name}/r{done}", 0.0, f"maxerr={err:.5f}"))
+    return rows
+
+
+# ------------------------ Fig 2: query/update tradeoff ---------------------------
+
+def bench_tradeoff(n: int = 100_000, dist: str = "lognormal",
+                   q_reps: int = 2000, seed: int = 0) -> List[dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    gen = DISTRIBUTIONS[dist]
+    for name, ctor in METHODS.items():
+        items = make_items(dist, n, seed)
+        idx = ctor(dict(items), 1.0, seed)
+        tq = time_queries(idx, q_reps, rng)
+        ops = 2000 if name in ("DIPS", "BruteForce") else 5
+        tu = time_updates(idx, n, ops, rng, lambda: gen(rng, 1)[0])
+        rows.append({"fig": "fig2", "method": name, "n": n,
+                     "query_us": tq * 1e6, "update_us": tu * 1e6})
+        print(csv_row(f"fig2/{name}", tq * 1e6,
+                      f"update_us={tu*1e6:.2f};n={n}"))
+    return rows
+
+
+# ------------------------ Fig 3 (+7-9): query time vs n ---------------------------
+
+def bench_query(ns=(10_000, 100_000, 1_000_000), dists=("exponential", "lognormal"),
+                cs=(1.0, 0.4), q_reps: int = 2000, seed: int = 0,
+                methods=("DIPS", "R-ODSS", "R-BSS", "R-HSS")) -> List[dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    for dist in dists:
+        for c in cs:
+            for n in ns:
+                items = make_items(dist, n, seed)
+                for name in methods:
+                    idx = METHODS[name](dict(items), c, seed)
+                    tq = time_queries(idx, q_reps, rng)
+                    rows.append({"fig": "fig3", "method": name, "n": n,
+                                 "dist": dist, "c": c, "query_us": tq * 1e6})
+                    print(csv_row(f"fig3/{name}/{dist}/c{c}/n{n}", tq * 1e6))
+    return rows
+
+
+# ------------------------ Fig 4: update time vs n -----------------------------------
+
+def bench_update(ns=(10_000, 100_000, 1_000_000), dist: str = "lognormal",
+                 seed: int = 0,
+                 methods=("DIPS", "R-ODSS", "R-BSS", "R-HSS", "BruteForce")
+                 ) -> List[dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    gen = DISTRIBUTIONS[dist]
+    for n in ns:
+        items = make_items(dist, n, seed)
+        for name in methods:
+            idx = METHODS[name](dict(items), 1.0, seed)
+            ops = 1000 if name in ("DIPS", "BruteForce") else 4
+            tu = time_updates(idx, n, ops, rng, lambda: gen(rng, 1)[0])
+            rows.append({"fig": "fig4", "method": name, "n": n,
+                         "dist": dist, "update_us": tu * 1e6})
+            print(csv_row(f"fig4/{name}/n{n}", tu * 1e6))
+    return rows
+
+
+# ------------------------ Table 1: memory usage -----------------------------------
+
+def _deep_bytes(obj, seen=None) -> int:
+    import sys as _sys
+
+    if seen is None:
+        seen = set()
+    oid = id(obj)
+    if oid in seen:
+        return 0
+    seen.add(oid)
+    size = _sys.getsizeof(obj, 0)
+    if isinstance(obj, np.ndarray):
+        return size + obj.nbytes
+    if isinstance(obj, dict):
+        size += sum(_deep_bytes(k, seen) + _deep_bytes(v, seen)
+                    for k, v in obj.items())
+    elif isinstance(obj, (list, tuple, set, frozenset)):
+        size += sum(_deep_bytes(x, seen) for x in obj)
+    elif hasattr(obj, "__dict__"):
+        size += _deep_bytes(vars(obj), seen)
+    elif hasattr(obj, "__slots__"):
+        size += sum(_deep_bytes(getattr(obj, a), seen)
+                    for a in obj.__slots__ if hasattr(obj, a))
+    return size
+
+
+def bench_memory(ns=(10_000, 100_000, 1_000_000), dist: str = "lognormal",
+                 seed: int = 0) -> List[dict]:
+    rows = []
+    for n in ns:
+        items = make_items(dist, n, seed)
+        for name in ("DIPS", "R-ODSS"):
+            idx = METHODS[name](dict(items), 1.0, seed)
+            b = _deep_bytes(idx)
+            rows.append({"fig": "table1", "method": name, "n": n, "bytes": b})
+            print(csv_row(f"table1/{name}/n{n}", 0.0, f"MB={b/1e6:.2f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Framework-integration benchmark: per-example weight updates in the data
+pipeline, DIPS vs the SS-reduction alternative.
+
+Every training step updates B example weights; with DIPS each is O(1),
+while a subset-sampling pipeline recomputes all pool probabilities.  This
+measures exactly the gap that motivates using DIPS inside the trainer.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import DIPS, R_ODSS
+
+from .common import csv_row
+
+
+def bench_pipeline_updates(pools=(1_000, 10_000, 100_000), batch: int = 64,
+                           steps: int = 20, seed: int = 0) -> List[dict]:
+    rows = []
+    rng = np.random.default_rng(seed)
+    for pool in pools:
+        for name, ctor in (("DIPS", DIPS), ("R-ODSS", R_ODSS)):
+            items = {i: 1.0 for i in range(pool)}
+            idx = ctor(items, c=1.0, seed=seed)
+            n_steps = steps if name == "DIPS" else max(2, steps // 10)
+            t0 = time.perf_counter()
+            for s in range(n_steps):
+                ids = rng.integers(0, pool, batch)
+                losses = rng.random(batch) * 10
+                for i, l in zip(ids, losses):
+                    idx.change_w(int(i), float(l) + 1e-3)
+            per_update = (time.perf_counter() - t0) / (n_steps * batch)
+            rows.append({"fig": "pipeline", "method": name, "pool": pool,
+                         "update_us": per_update * 1e6})
+            print(csv_row(f"pipeline/{name}/pool{pool}", per_update * 1e6))
+    return rows

@@ -1,0 +1,80 @@
+"""Dry-run profiling helper: dump the largest collectives / ops of a cell's
+cost probe (the hillclimb 'profiler' -- no hardware, so the lowered IR and
+cost analysis ARE the profile)."""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")).strip()
+
+import argparse
+import collections
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import _build_lowered, _probe_cfg
+from repro.launch.hlo_analysis import _DTYPE_BYTES, _SHAPE_RE, _GROUPS_RE, _IOTA_GROUPS_RE
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.context import activation_mesh
+
+
+def nbytes(dtype, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--kind", default="coll", choices=["coll", "ops"])
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi)
+    cfg = _probe_cfg(get_config(args.arch), args.layers)
+    with activation_mesh(mesh):
+        lowered, _ = _build_lowered(cfg, SHAPES[args.shape], mesh)
+        compiled = lowered.compile()
+    text = compiled.as_text()
+
+    rows = []
+    agg = collections.Counter()
+    for line in text.splitlines():
+        ls = line.strip()
+        if "= " not in ls or ls.startswith("//"):
+            continue
+        rhs = ls.split("= ", 1)[1]
+        head = rhs.split("(")[0].strip().split()
+        if not head:
+            continue
+        opname = head[-1]
+        if args.kind == "coll" and not any(
+                c in opname for c in ("all-reduce", "all-gather", "reduce-scatter",
+                                      "all-to-all", "collective-permute")):
+            continue
+        m = _SHAPE_RE.findall(rhs.split("(")[0])
+        if not m:
+            continue
+        b = sum(nbytes(d, dd) for d, dd in m)
+        rows.append((b, opname, m[:2], ls[:110]))
+        agg[opname] += b
+    rows.sort(reverse=True)
+    for b, op, shapes, _ in rows[: args.top]:
+        print(f"{b/1e9:9.3f} GB  {op:22s} {shapes}")
+    print("\n-- aggregate by op --")
+    for op, b in agg.most_common(12):
+        print(f"{b/1e9:9.2f} GB  {op}")
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    print(f"\nflops={cost.get('flops'):.3e} bytes={cost.get('bytes accessed'):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Roofline table generator: reads the dry-run JSON, emits the EXPERIMENTS
+section tables (per arch x shape x mesh: three terms, dominant bottleneck,
+model-vs-HLO FLOP ratio, memory feasibility)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional
+
+HBM_LIMIT = 16e9  # v5e per-chip HBM
+
+
+def load(path: str = "benchmarks/results/dryrun.json") -> List[dict]:
+    return json.loads(Path(path).read_text())
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def table(records: List[dict], mesh: Optional[str] = "16x16") -> str:
+    rows = []
+    head = ("| arch | shape | mesh | compute s | memory s | collective s | "
+            "dominant | useful/HLO | fit<16G |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip | skip | skip | n/a | n/a | n/a |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | | | | | |")
+            continue
+        t = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        resident = (r.get("state_bytes_per_device", 0)
+                    + r.get("params_bytes_per_device", 0))
+        temp = ma.get("temp_size_in_bytes", 0)
+        fits = "yes" if (resident + temp) < HBM_LIMIT else (
+            f"no ({(resident+temp)/1e9:.0f}G)")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} | "
+            f"{fmt_s(t['collective_s'])} | {t['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | {fits} |")
+    return "\n".join(rows)
+
+
+def summary(records: List[dict]) -> str:
+    ok = [r for r in records if r["status"] == "ok"]
+    lines = []
+    for dom in ("compute_s", "memory_s", "collective_s"):
+        cells = [r for r in ok if r["roofline"]["dominant"] == dom]
+        lines.append(f"{dom}: dominant in {len(cells)} cells")
+    worst = sorted(
+        (r for r in ok if r["shape"] == "train_4k"),
+        key=lambda r: r["roofline"]["roofline_fraction_compute"])[:5]
+    lines.append("worst train-compute fractions: " + ", ".join(
+        f"{r['arch']}@{r['mesh']}="
+        f"{r['roofline']['roofline_fraction_compute']:.3f}" for r in worst))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    records = load()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## Roofline ({mesh})\n")
+        print(table(records, mesh))
+    print("\n## Summary\n")
+    print(summary(records))
+    out = Path("benchmarks/results/roofline.md")
+    with out.open("w") as f:
+        for mesh in ("16x16", "2x16x16"):
+            f.write(f"\n### Mesh {mesh}\n\n")
+            f.write(table(records, mesh))
+            f.write("\n")
+        f.write("\n### Summary\n\n" + summary(records) + "\n")
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

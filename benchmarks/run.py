@@ -1,0 +1,81 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` (default) uses
+container-scale sizes; ``--full`` approaches paper-scale n (hours).
+Results are also dumped to benchmarks/results/bench_results.json for the
+EXPERIMENTS.md tables.
+
+  fig1    max-abs-error vs repeats (correctness, paper Fig 1)
+  fig2    query/update tradeoff (paper Fig 2)
+  fig3    query time vs n, c in {1.0, 0.4} (paper Figs 3, 7-9)
+  fig4    update time vs n (paper Fig 4)
+  table1  memory usage DIPS vs R-ODSS (paper Table 1)
+  fig5/6  dynamic influence maximization (paper Sec 5)
+  pipeline  DIPS-vs-rebuild data-pipeline weight updates (framework)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default="", help="comma list: fig1,fig2,...")
+    args = ap.parse_args()
+
+    from . import bench_im, bench_paper
+    from .bench_pipeline import bench_pipeline_updates
+
+    full = args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    all_rows = []
+    t0 = time.time()
+    if want("fig1"):
+        all_rows += bench_paper.bench_correctness(
+            n=100_000 if full else 10_000,
+            repeat_grid=(1_000, 10_000, 100_000, 1_000_000) if full
+            else (1_000, 10_000, 100_000))
+    if want("fig2"):
+        all_rows += bench_paper.bench_tradeoff(n=100_000 if full else 50_000)
+    if want("fig3"):
+        all_rows += bench_paper.bench_query(
+            ns=(10_000, 100_000, 1_000_000, 10_000_000) if full
+            else (10_000, 100_000, 1_000_000))
+    if want("fig4"):
+        all_rows += bench_paper.bench_update(
+            ns=(10_000, 100_000, 1_000_000, 10_000_000) if full
+            else (10_000, 100_000, 1_000_000))
+    if want("table1"):
+        all_rows += bench_paper.bench_memory(
+            ns=(10_000, 100_000, 1_000_000))
+    if want("fig5"):
+        all_rows += bench_im.bench_im_runtime(
+            n_nodes=100_000 if full else 20_000,
+            n_rr=5000 if full else 1500)
+    if want("fig6"):
+        all_rows += bench_im.bench_im_updates(
+            n_nodes=100_000 if full else 20_000)
+    if want("pipeline"):
+        all_rows += bench_pipeline_updates(
+            pools=(1_000, 10_000, 100_000) if not full
+            else (10_000, 100_000, 1_000_000))
+
+    out = Path("benchmarks/results/bench_results.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1))
+    print(f"# wrote {len(all_rows)} records to {out} "
+          f"in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""End-to-end driver: train the ~100M-parameter LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm_100m.py \
+        [--steps 300] [--ckpt-dir /tmp/lm100m]
+
+This is a thin wrapper over the production launcher
+(``python -m repro.launch.train``) with the deliverable defaults:
+100M params, synthetic LM data, checkpoints every 50 steps, auto-resume.
+Add ``--dips`` for the importance-sampling pipeline or ``--compress 0.1``
+for PPS gradient compression.  On this single-core CPU container expect
+~10 s/step at the default batch geometry.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "300"]
+    if "--batch" not in " ".join(sys.argv):
+        sys.argv += ["--batch", "2", "--seq", "128"]
+    if "--ckpt-dir" not in " ".join(sys.argv):
+        sys.argv += ["--ckpt-dir", "/tmp/lm100m_ckpt", "--ckpt-every", "50"]
+    main()

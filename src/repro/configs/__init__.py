@@ -1,0 +1,39 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+
+from .base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from . import (
+    deepseek_7b,
+    gemma_2b,
+    granite_moe_3b_a800m,
+    h2o_danube_3_4b,
+    hymba_1_5b,
+    internvl2_26b,
+    mixtral_8x22b,
+    qwen3_1_7b,
+    whisper_large_v3,
+    xlstm_350m,
+)
+
+_MODULES = {
+    "whisper-large-v3": whisper_large_v3,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+    "mixtral-8x22b": mixtral_8x22b,
+    "hymba-1.5b": hymba_1_5b,
+    "xlstm-350m": xlstm_350m,
+    "h2o-danube-3-4b": h2o_danube_3_4b,
+    "deepseek-7b": deepseek_7b,
+    "qwen3-1.7b": qwen3_1_7b,
+    "gemma-2b": gemma_2b,
+    "internvl2-26b": internvl2_26b,
+}
+
+REGISTRY = {k: m.CONFIG for k, m in _MODULES.items()}
+ARCH_IDS = list(REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return REGISTRY[arch_id]
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].smoke()

@@ -1,0 +1,112 @@
+"""Model / run configuration system.
+
+``ModelConfig`` captures everything needed to build any of the assigned
+architectures; each ``configs/<arch>.py`` exports ``CONFIG`` with the exact
+published numbers plus ``smoke()`` returning the reduced same-family config
+used by CPU smoke tests.  ``repro.configs.registry`` maps --arch ids to
+modules.  Input shapes (paper-assigned workload grid) live in ``SHAPES``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    mlp_kind: str = "swiglu"         # swiglu | geglu | gelu | none
+    qk_norm: bool = False
+    swa_window: int = 0              # 0 = full attention
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma-style sqrt(d) embedding scaling
+    vocab_pad_to: int = 256
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # SSM / hybrid
+    ssm_state: int = 16
+    slstm_every: int = 0             # xlstm: 1 sLSTM per this many layers (0 = none)
+    # encoder-decoder (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # stub frontend sequence (audio frames)
+    # vlm
+    n_patches: int = 0               # stub vision tokens prepended
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "block"             # none | block (checkpoint each layer)
+    scan_layers: bool = True
+    attn_impl: str = "xla"           # xla | pallas (TPU runs)
+    attn_chunk: int = 1024           # query-chunked attention (0 = dense)
+    scan_unroll: int = 1             # unroll factor for the layer scan (cost probes)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0 and self.top_k > 0
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: SSM/hybrid state or sliding-window KV."""
+        return self.family in ("ssm", "hybrid") or self.swa_window > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs autoregress (whisper via its decoder)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) cell runs; reason recorded in the dry-run table."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full quadratic attention; 500k decode infeasible (DESIGN.md)"
+    return True, ""

@@ -1,0 +1,15 @@
+"""gemma-2b [dense]: 18L, d=2048, 8H MQA (kv=1), d_ff=16384, GeGLU,
+head_dim=256, vocab=256000, sqrt(d) embedding scaling.
+[arXiv:2403.08295; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma-2b", family="dense",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, d_ff=16384,
+    vocab_size=256000, mlp_kind="geglu", head_dim=256,
+    tie_embeddings=True, embed_scale=True,
+)
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+                          d_ff=128, vocab_size=512, head_dim=16)

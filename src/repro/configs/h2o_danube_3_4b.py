@@ -1,0 +1,14 @@
+"""h2o-danube-3-4b [dense]: 24L, d=3840, 32H GQA kv=8, d_ff=10240,
+vocab=32000, llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_ff=10240,
+    vocab_size=32000, swa_window=4096,
+)
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab_size=512, swa_window=8)

@@ -1,0 +1,18 @@
+"""hymba-1.5b [hybrid]: 32L, d=1600, 25H GQA kv=5 (head_dim 64), d_ff=5504,
+vocab=32001, parallel attention + mamba heads with ssm_state=16.
+[arXiv:2411.13676; hf]
+
+Simplifications recorded in DESIGN.md: no meta tokens; mamba branch without
+the depthwise-conv prelude; per-branch RMS norms then mean combine.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab_size=32001, ssm_state=16, tie_embeddings=True,
+)
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab_size=512, ssm_state=4)

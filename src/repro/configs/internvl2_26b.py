@@ -1,0 +1,15 @@
+"""internvl2-26b [vlm]: InternLM2-20B language backbone -- 48L, d=6144,
+48H GQA kv=8, d_ff=16384, vocab=92553 -- with the InternViT frontend
+STUBBED to precomputed patch embeddings (n_patches=256).
+[arXiv:2404.16821; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab_size=92553, n_patches=256,
+)
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab_size=512, n_patches=8)

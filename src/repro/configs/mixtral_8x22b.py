@@ -1,0 +1,15 @@
+"""mixtral-8x22b [moe]: 56L, d=6144, 48H GQA kv=8, d_ff=16384, vocab=32768,
+8 experts top-2, sliding-window attention.  [arXiv:2401.04088; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab_size=32768, n_experts=8, top_k=2, swa_window=4096,
+    rope_theta=1e6,
+)
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab_size=512, n_experts=4, top_k=2,
+                          swa_window=8)

@@ -1,0 +1,20 @@
+"""whisper-large-v3 [audio]: enc-dec, conv frontend stubbed to precomputed
+frame embeddings.  32L decoder (and 32L encoder), d=1280, 20H MHA (kv=20),
+d_ff=5120, vocab=51866.  [arXiv:2212.04356; unverified]
+
+Whisper uses absolute sinusoidal positions (rope_theta=0) and GELU MLPs.
+Note: the assigned train_4k/prefill_32k shapes exceed Whisper's native
+448-token decoder context; we honor the assigned shapes (DESIGN.md).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-large-v3", family="encdec",
+    n_layers=32, n_enc_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+    d_ff=5120, vocab_size=51866, mlp_kind="gelu", rope_theta=0.0,
+    tie_embeddings=True, enc_seq=1500,
+)
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, n_enc_layers=2, d_model=64, n_heads=4,
+                          n_kv_heads=4, d_ff=128, vocab_size=512, enc_seq=16)

@@ -1,0 +1,14 @@
+"""xlstm-350m [ssm]: 24L, d=1024, 4 heads, no FFN (d_ff=0), vocab=50304,
+alternating sLSTM + mLSTM blocks (1 sLSTM per 6 layers).
+[arXiv:2405.04517; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304, mlp_kind="none", slstm_every=6, tie_embeddings=True,
+)
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=4, d_model=64, n_heads=2, n_kv_heads=2,
+                          vocab_size=512, slstm_every=2)

@@ -1,0 +1,66 @@
+"""repro.core: DIPS -- optimal dynamic index for Poisson pi-ps sampling.
+
+Host-side (paper-faithful, O(1) query / O(1) update / O(n) space):
+  DIPS, PPSNode, and the building blocks of Sec 3.1 / 3.3.
+Device-side (JAX, batched):
+  pps_bernoulli_mask / pps_sample_indices (flat), BucketedIndex (TPU-adapted
+  hierarchy), pps_gradient_mask (compression operator).
+Competitors of Sec 4: R_HSS, R_BSS, R_ODSS, BruteForcePPS.
+"""
+
+from .pps import PPSInstance, max_abs_error, truncated_geometric
+from .samplers import (
+    BoundedRatioSampler,
+    DirectSampler,
+    DynamicWeightedArray,
+    jump_scan,
+    subcritical_scan_into,
+)
+from .table_lookup import RoundedLookup
+from .dips import DIPS, PPSNode
+from .baselines import ALL_METHODS, BruteForcePPS, R_BSS, R_HSS, R_ODSS
+from .jax_sampler import (
+    expected_sample_size,
+    inclusion_probs,
+    pps_bernoulli_mask,
+    pps_gradient_mask,
+    pps_sample_indices,
+)
+from .jax_index import (
+    BucketedIndex,
+    bucketed_change_w,
+    bucketed_sample,
+    build_bucketed_index,
+    marginal_probs,
+)
+
+ALL_METHODS["DIPS"] = DIPS
+
+__all__ = [
+    "DIPS",
+    "PPSNode",
+    "PPSInstance",
+    "BoundedRatioSampler",
+    "DirectSampler",
+    "DynamicWeightedArray",
+    "RoundedLookup",
+    "R_HSS",
+    "R_BSS",
+    "R_ODSS",
+    "BruteForcePPS",
+    "ALL_METHODS",
+    "max_abs_error",
+    "truncated_geometric",
+    "jump_scan",
+    "subcritical_scan_into",
+    "pps_bernoulli_mask",
+    "pps_sample_indices",
+    "pps_gradient_mask",
+    "inclusion_probs",
+    "expected_sample_size",
+    "BucketedIndex",
+    "build_bucketed_index",
+    "bucketed_sample",
+    "bucketed_change_w",
+    "marginal_probs",
+]

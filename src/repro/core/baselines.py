@@ -1,0 +1,282 @@
+"""Subset-sampling-based competitors for Poisson pi-ps sampling (paper Sec 4).
+
+The reduction (paper Sec 2.3): compute ``p_w(v) = c*w(v)/W_S`` for every
+element and hand the resulting *subset sampling* (SS) instance to an SS
+index.  Queries then cost whatever the SS index costs -- but any PPS update
+(insert/delete/change_w) changes *every* ``p_w(v)``, so the SS structure
+must be rebuilt in O(n).  That O(n)-vs-O(1) update gap is exactly what the
+paper's Figures 2 and 4 measure, and what DIPS eliminates.
+
+Implemented competitors:
+
+  * ``BruteForcePPS``  -- dynamic array, O(n) query by scanning, O(1) update
+    (the lowest-possible-update reference of Fig 2).
+  * ``R_HSS``  [Tsai et al., COCOON'10]  -- dyadic probability groups,
+    query visits *every* group index: O(log n + mu) query, rebuild on update.
+  * ``R_BSS``  [Bringmann & Panagiotou, ICALP'12]  -- two-level dyadic
+    grouping: only *hit* groups are visited, O(1 + mu) expected query
+    (static; rebuild on update).
+  * ``R_ODSS`` [Yi, Wang & Wei, SIGKDD'23]  -- same two-level structure
+    with O(1) dynamic SS updates; under the PPS reduction an update still
+    forces a full rebuild because all probabilities shift (paper Sec 2.5).
+
+The two-level structure here is a faithful simplification of ODSS: depth-2
+reduction ends in a direct scan over O(log log n) group-groups rather than
+a lookup table (see DESIGN.md, "Baseline fidelity").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Hashable, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .pps import Key, any_success_probability, truncated_geometric
+from .samplers import DynamicWeightedArray, jump_scan
+
+
+def _group_of(p: float, tail: int) -> int:
+    """Dyadic group id: p in (2^-(i+1), 2^-i] -> i, capped at the tail group."""
+    if p >= 1.0:
+        return 0
+    i = int(-math.log2(p))
+    while p <= 2.0 ** -(i + 1):
+        i += 1
+    while p > 2.0**-i:
+        i -= 1
+    return min(i, tail)
+
+
+class _GroupedSS:
+    """Dyadic-group subset sampler over (key, prob) with O(1) updates.
+
+    ``query_hit_groups`` enumerates groups via the ``level2`` index (exact
+    SS over the groups' any-hit probabilities q_i), then samples members
+    conditioned on the hit with a truncated-geometric scan.
+    ``query_all_groups`` scans every group index (R-HSS behaviour).
+    """
+
+    def __init__(self, items: Iterable[Tuple[Key, float]], n_hint: int, two_level: bool) -> None:
+        n = max(n_hint, 2)
+        self.tail = max(1, math.ceil(2 * math.log2(n)))
+        self.two_level = two_level
+        self.groups: Dict[int, DynamicWeightedArray] = {}
+        # level-2: group id -> any-hit probability q_i (direct scan; the
+        # instance has O(log n) elements, its own grouping would give
+        # O(log log n) -- a constant-size scan either way).
+        self.q: Dict[int, float] = {}
+        for k, p in items:
+            self.insert(k, p)
+
+    def _pbar(self, i: int) -> float:
+        return 2.0**-i
+
+    def _refresh_q(self, i: int) -> None:
+        g = self.groups.get(i)
+        if g is None or len(g) == 0:
+            self.q.pop(i, None)
+            self.groups.pop(i, None)
+        else:
+            self.q[i] = any_success_probability(self._pbar(i), len(g))
+
+    def insert(self, key: Key, p: float) -> None:
+        i = _group_of(p, self.tail)
+        g = self.groups.get(i)
+        if g is None:
+            g = self.groups[i] = DynamicWeightedArray()
+        g.insert(key, p)
+        self._refresh_q(i)
+
+    def delete(self, key: Key, p: float) -> None:
+        i = _group_of(p, self.tail)
+        self.groups[i].delete(key)
+        self._refresh_q(i)
+
+    def change_p(self, key: Key, p_old: float, p_new: float) -> None:
+        i, j = _group_of(p_old, self.tail), _group_of(p_new, self.tail)
+        if i == j:
+            self.groups[i].change_w(key, p_new)
+        else:
+            self.delete(key, p_old)
+            self.insert(key, p_new)
+
+    # -- queries ---------------------------------------------------------------
+    def _scan_group(self, i: int, rng: np.random.Generator, out: List[Key]) -> None:
+        g = self.groups.get(i)
+        if not g or len(g) == 0:
+            return
+        pbar = self._pbar(i)
+
+        def accept(key: Key, p: float, u: float) -> bool:
+            return u * pbar < p
+
+        jump_scan(g, pbar, accept, rng, out)
+
+    def _scan_group_conditioned(self, i: int, rng: np.random.Generator, out: List[Key]) -> None:
+        """Sample group's members conditioned on >= 1 candidate (hit known)."""
+        g = self.groups[i]
+        t = len(g)
+        pbar = self._pbar(i)
+        if pbar >= 1.0:
+            for k, p in g.items():
+                if rng.random() * pbar < p:
+                    out.append(k)
+            return
+        qi = self.q[i]
+        log1m = math.log1p(-pbar)
+        j = min(int(math.log1p(-qi * rng.random()) // log1m), t - 1)
+        keys, probs = g.keys, g.weights
+        while j < t:
+            if rng.random() * pbar < probs[j]:
+                out.append(keys[j])
+            j += 1 + int(math.log1p(-rng.random()) // log1m)
+
+    def query_all_groups(self, rng: np.random.Generator, out: List[Key]) -> None:
+        """R-HSS: visit every dyadic index 0..tail -- O(log n + mu)."""
+        for i in range(self.tail + 1):
+            self._scan_group(i, rng, out)
+
+    def query_hit_groups(self, rng: np.random.Generator, out: List[Key]) -> None:
+        """R-BSS / R-ODSS: Bernoulli over q_i, then conditioned member scans."""
+        for i, qi in self.q.items():
+            if rng.random() < qi:
+                self._scan_group_conditioned(i, rng, out)
+
+
+class _SSReductionBase:
+    """PPS facade over an SS index: updates recompute all probs (O(n))."""
+
+    #: subclasses set this; benchmarks read it to label update complexity
+    UPDATE_REBUILDS = True
+
+    def __init__(self, items: Optional[Dict[Key, float]] = None, c: float = 1.0,
+                 seed: Optional[int] = None, two_level: bool = True) -> None:
+        self.c = c
+        self.two_level = two_level
+        self._rng = np.random.default_rng(seed)
+        self._weights: Dict[Key, float] = {k: float(w) for k, w in (items or {}).items()}
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        W = sum(self._weights.values())
+        n = len(self._weights)
+        pairs = []
+        if W > 0:
+            pairs = [(k, self.c * w / W) for k, w in self._weights.items() if w > 0]
+        self._ss = _GroupedSS(pairs, n_hint=n, two_level=self.two_level)
+
+    # PPS updates: every inclusion probability changes -> rebuild (Sec 2.3).
+    def insert(self, key: Key, w: float) -> None:
+        if key in self._weights:
+            raise KeyError(f"duplicate key {key!r}")
+        self._weights[key] = float(w)
+        self._rebuild()
+
+    def delete(self, key: Key) -> float:
+        w = self._weights.pop(key)
+        self._rebuild()
+        return w
+
+    def change_w(self, key: Key, w_new: float) -> None:
+        self._weights[key] = float(w_new)
+        self._rebuild()
+
+    def query(self, rng: Optional[np.random.Generator] = None) -> List[Key]:
+        rng = rng or self._rng
+        out: List[Key] = []
+        if self.two_level:
+            self._ss.query_hit_groups(rng, out)
+        else:
+            self._ss.query_all_groups(rng, out)
+        return out
+
+    def __len__(self) -> int:
+        return len(self._weights)
+
+    @property
+    def total_weight(self) -> float:
+        return float(sum(self._weights.values()))
+
+    def inclusion_probability(self, key: Key) -> float:
+        W = self.total_weight
+        return 0.0 if W <= 0 else self.c * self._weights[key] / W
+
+
+class R_HSS(_SSReductionBase):
+    """Reduction to HeterogeneousSS [27]: O(log n + mu) query."""
+
+    def __init__(self, items=None, c: float = 1.0, seed: Optional[int] = None) -> None:
+        super().__init__(items, c=c, seed=seed, two_level=False)
+
+
+class R_BSS(_SSReductionBase):
+    """Reduction to BringmannSS [5]: O(1 + mu) query, static."""
+
+    def __init__(self, items=None, c: float = 1.0, seed: Optional[int] = None) -> None:
+        super().__init__(items, c=c, seed=seed, two_level=True)
+
+
+class R_ODSS(_SSReductionBase):
+    """Reduction to ODSS [29]: optimal dynamic SS, but PPS updates still
+    shift every probability, forcing the O(n) rebuild (paper Sec 2.5)."""
+
+    def __init__(self, items=None, c: float = 1.0, seed: Optional[int] = None) -> None:
+        super().__init__(items, c=c, seed=seed, two_level=True)
+
+
+class BruteForcePPS:
+    """Dynamic array + full scan: O(1) update, O(n) query (Fig 2 reference)."""
+
+    UPDATE_REBUILDS = False
+
+    def __init__(self, items: Optional[Dict[Key, float]] = None, c: float = 1.0,
+                 seed: Optional[int] = None) -> None:
+        self.c = c
+        self._rng = np.random.default_rng(seed)
+        self._arr = DynamicWeightedArray((k, float(w)) for k, w in (items or {}).items())
+
+    def insert(self, key: Key, w: float) -> None:
+        self._arr.insert(key, float(w))
+
+    def delete(self, key: Key) -> float:
+        return self._arr.delete(key)
+
+    def change_w(self, key: Key, w_new: float) -> None:
+        self._arr.change_w(key, float(w_new))
+
+    def query(self, rng: Optional[np.random.Generator] = None) -> List[Key]:
+        rng = rng or self._rng
+        W = self._arr.total
+        out: List[Key] = []
+        if W <= 0:
+            return out
+        inv = self.c / W
+        # vectorized scan: numpy uniforms beat a pure-python loop ~20x
+        u = rng.random(len(self._arr))
+        w = np.asarray(self._arr.weights)
+        hits = np.nonzero(u < inv * w)[0]
+        keys = self._arr.keys
+        for i in hits:
+            out.append(keys[i])
+        return out
+
+    def __len__(self) -> int:
+        return len(self._arr)
+
+    @property
+    def total_weight(self) -> float:
+        return self._arr.total
+
+    def inclusion_probability(self, key: Key) -> float:
+        W = self._arr.total
+        return 0.0 if W <= 0 else self.c * self._arr.weight(key) / W
+
+
+ALL_METHODS = {
+    "DIPS": None,  # filled by core.__init__ to avoid a circular import
+    "R-HSS": R_HSS,
+    "R-BSS": R_BSS,
+    "R-ODSS": R_ODSS,
+    "BruteForce": BruteForcePPS,
+}

@@ -1,0 +1,446 @@
+"""DIPS: the optimal dynamic index for Poisson pi-ps sampling (paper Sec 3).
+
+Structure (Theorem 3.7) for an n-element instance <S, w, c>:
+
+  * Every element lives in bucket ``B_j`` where ``b^j < w(v) <= b^{j+1}``.
+  * Bucket ``B_j`` belongs to chunk ``C_t`` iff
+    ``j in [t*L, (t+1)*L)`` with ``L = ceil(log_b n)`` (n frozen at build
+    time; the structure rebuilds when the live size doubles or halves, so
+    the bucket->chunk mapping changes only then -- amortized O(1), made
+    worst-case O(1) by standard background rebuilding [Overmars 83]).
+  * Chunk weights are normalized by ``b^{-t*L}`` so every bucket weight
+    inside a chunk lies in ``(1, b*n^2]`` -- this bounds the *weight
+    explosion* that blocks a direct port of subset-sampling indexes.
+  * A query touches only the three *significant* chunks ``C_r, C_{r-1},
+    C_{r-2}`` (r = highest non-empty chunk, located from W_S in O(1));
+    every other element has weight <= W_S/(b*n^2) and is covered by the
+    subcritical scan of Lemma 3.2 in O(1/n) expected time.
+  * Each chunk's bucket-level instance is itself a PPS instance (weights
+    normalized, c = 1) handled by a recursive node; after two reductions
+    the instance size is O(log log n) and a leaf sampler finishes the job
+    (exact per-element Bernoulli scan, or the Lemma 3.4 lookup table).
+
+Every operation -- query, change_w, insert, delete -- is expected O(1);
+space is O(n).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Hashable, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .pps import Key, PPSInstance, RandomStream
+from .samplers import (
+    BoundedRatioSampler,
+    DirectSampler,
+    DynamicWeightedArray,
+    subcritical_scan_into,
+)
+from .table_lookup import RoundedLookup
+
+_DIRECT, _SR = 0, 1
+
+
+class _Chunk:
+    __slots__ = ("w", "child", "scale")
+
+    def __init__(self, w: float, child: "PPSNode", scale: float) -> None:
+        self.w = w
+        self.child = child
+        self.scale = scale
+
+
+class PPSNode:
+    """One level of the recursive structure (generic over element keys)."""
+
+    __slots__ = (
+        "b",
+        "c",
+        "threshold",
+        "depth",
+        "leaf_backend",
+        "mode",
+        "direct",
+        "elems",
+        "buckets",
+        "chunks",
+        "L",
+        "old_size",
+        "_logb",
+    )
+
+    def __init__(
+        self,
+        items: Iterable[Tuple[Key, float]],
+        b: int = 4,
+        c: float = 1.0,
+        threshold: int = 16,
+        depth: int = 0,
+        leaf_backend: str = "direct",
+    ) -> None:
+        if b < 2:
+            raise ValueError("b must be >= 2")
+        self.b = b
+        self.c = c
+        self.threshold = max(2, threshold)
+        self.depth = depth
+        self.leaf_backend = leaf_backend
+        self._logb = math.log(b)
+        self._build(list(items))
+
+    # -- construction -------------------------------------------------------
+    def _build(self, items: List[Tuple[Key, float]]) -> None:
+        n = len(items)
+        self.old_size = n
+        if n <= self.threshold:
+            self.mode = _DIRECT
+            self.direct = self._make_leaf(items)
+            self.elems = None
+            self.buckets = None
+            self.chunks = None
+            self.L = 1
+            return
+        self.mode = _SR
+        self.direct = None
+        self.elems = DynamicWeightedArray(items)
+        self.buckets: Dict[int, BoundedRatioSampler] = {}
+        self.chunks: Dict[int, _Chunk] = {}
+        self.L = max(1, math.ceil(math.log(max(n, 2)) / self._logb))
+        # Bulk: fill buckets, then create each chunk's child in one shot.
+        for k, w in items:
+            j = self._bucket_index(w)
+            bkt = self.buckets.get(j)
+            if bkt is None:
+                bkt = BoundedRatioSampler(self._pow(j + 1))
+                self.buckets[j] = bkt
+            bkt.insert(k, w)
+        per_chunk: Dict[int, List[int]] = {}
+        for j in self.buckets:
+            per_chunk.setdefault(self._chunk_of(j), []).append(j)
+        for t, bucket_ids in per_chunk.items():
+            scale = self._pow(-t * self.L)
+            child_items = [(j, self.buckets[j].total * scale) for j in bucket_ids]
+            child = PPSNode(
+                child_items,
+                b=self.b,
+                c=1.0,
+                threshold=self.threshold,
+                depth=self.depth + 1,
+                leaf_backend=self.leaf_backend,
+            )
+            w_chunk = float(sum(self.buckets[j].total for j in bucket_ids))
+            self.chunks[t] = _Chunk(w_chunk, child, scale)
+
+    def _make_leaf(self, items: List[Tuple[Key, float]]):
+        if self.leaf_backend == "table" and len(items) >= 2:
+            leaf = RoundedLookup(items)
+            if leaf.is_valid():
+                return leaf
+        return DirectSampler(items)
+
+    # -- arithmetic helpers ---------------------------------------------------
+    def _pow(self, j: int) -> float:
+        return float(self.b) ** j
+
+    def _bucket_index(self, w: float) -> int:
+        """j such that b^j < w <= b^{j+1} (floor-log with boundary repair)."""
+        j = math.floor(math.log(w) / self._logb)
+        # Repair float error at power-of-b boundaries.
+        while w <= self._pow(j):
+            j -= 1
+        while w > self._pow(j + 1):
+            j += 1
+        return j
+
+    def _chunk_of(self, j: int) -> int:
+        return j // self.L  # floor division (negatives round toward -inf)
+
+    # -- size bookkeeping -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.direct) if self.mode == _DIRECT else len(self.elems)
+
+    @property
+    def total(self) -> float:
+        return self.direct.total if self.mode == _DIRECT else self.elems.total
+
+    def _items(self) -> List[Tuple[Key, float]]:
+        src = self.direct.items() if self.mode == _DIRECT else self.elems.items()
+        return list(src)
+
+    def _maybe_rebuild(self) -> None:
+        n = len(self)
+        if self.mode == _DIRECT:
+            if n > 2 * self.threshold:
+                self._build(self._items())
+        else:
+            if n >= 2 * self.old_size or n <= self.old_size // 2:
+                self._build(self._items())
+
+    # -- dynamic operations (Algorithm 4) ---------------------------------------
+    def insert(self, key: Key, w: float) -> None:
+        if self.mode == _DIRECT:
+            self.direct.insert(key, w)
+        else:
+            self.elems.insert(key, w)
+            self._add_to_bucket(key, w)
+        self._maybe_rebuild()
+
+    def delete(self, key: Key) -> float:
+        if self.mode == _DIRECT:
+            w = self.direct.delete(key)
+        else:
+            w = self.elems.delete(key)
+            self._remove_from_bucket(key, w)
+        self._maybe_rebuild()
+        return w
+
+    def change_w(self, key: Key, w_new: float) -> None:
+        if self.mode == _DIRECT:
+            self.direct.change_w(key, w_new)
+            return
+        w_old = self.elems.change_w(key, w_new)
+        j_old = self._bucket_index(w_old)
+        j_new = self._bucket_index(w_new)
+        if j_old == j_new:
+            bkt = self.buckets[j_old]
+            bkt.change_w(key, w_new)
+            ch = self.chunks[self._chunk_of(j_old)]
+            ch.w += w_new - w_old
+            ch.child.change_w(j_old, bkt.total * ch.scale)
+        else:
+            self._remove_from_bucket(key, w_old, from_bucket=j_old)
+            self._add_to_bucket(key, w_new)
+
+    def _add_to_bucket(self, key: Key, w: float) -> None:
+        j = self._bucket_index(w)
+        bkt = self.buckets.get(j)
+        is_new_bucket = bkt is None
+        if is_new_bucket:
+            bkt = BoundedRatioSampler(self._pow(j + 1))
+            self.buckets[j] = bkt
+        bkt.insert(key, w)
+        t = self._chunk_of(j)
+        ch = self.chunks.get(t)
+        if ch is None:
+            scale = self._pow(-t * self.L)
+            child = PPSNode(
+                [(j, bkt.total * scale)],
+                b=self.b,
+                c=1.0,
+                threshold=self.threshold,
+                depth=self.depth + 1,
+                leaf_backend=self.leaf_backend,
+            )
+            self.chunks[t] = _Chunk(w, child, scale)
+            return
+        ch.w += w
+        if is_new_bucket:
+            ch.child.insert(j, bkt.total * ch.scale)
+        else:
+            ch.child.change_w(j, bkt.total * ch.scale)
+
+    def _remove_from_bucket(self, key: Key, w: float, from_bucket: Optional[int] = None) -> None:
+        j = self._bucket_index(w) if from_bucket is None else from_bucket
+        bkt = self.buckets[j]
+        bkt.delete(key)
+        t = self._chunk_of(j)
+        ch = self.chunks[t]
+        ch.w -= w
+        if len(bkt) == 0:
+            del self.buckets[j]
+            ch.child.delete(j)
+            if len(ch.child) == 0:
+                del self.chunks[t]
+        else:
+            ch.child.change_w(j, bkt.total * ch.scale)
+
+    # -- query (Algorithm 1) --------------------------------------------------
+    def query_into(self, rng: np.random.Generator, out: List[Key]) -> None:
+        if self.mode == _DIRECT:
+            self.direct.query_into(self.c, rng, out)
+            return
+        W = self.elems.total
+        if W <= 0.0 or len(self.elems) == 0:
+            return
+        # Locate r = max non-empty chunk from W_S alone (Algorithm 1 line 18):
+        # b^{rL} < W <= b^{(r+2)L}, so r in {x-2, x-1, x} with
+        # x = floor(log_b(W)/L).  The +1 probe guards float drift of W.
+        x = math.floor(math.log(W) / self._logb / self.L)
+        r = None
+        for cand in (x + 1, x, x - 1, x - 2):
+            if cand in self.chunks:
+                r = cand
+                break
+        if r is None:  # total-weight drift beyond the probe window: resync
+            self.elems.recompute_total()
+            W = self.elems.total
+            if W <= 0.0:
+                return
+            x = math.floor(math.log(W) / self._logb / self.L)
+            for cand in (x + 1, x, x - 1, x - 2):
+                if cand in self.chunks:
+                    r = cand
+                    break
+            if r is None:
+                return
+        ybuf: List[int] = []
+        for i in (r, r - 1, r - 2):
+            ch = self.chunks.get(i)
+            if ch is None:
+                continue
+            thin = ch.w / W
+            if thin > 1.0:
+                thin = 1.0
+            ybuf.clear()
+            ch.child.query_into(rng, ybuf)
+            for j in ybuf:
+                self.buckets[j].query_into(self.c, thin, rng, out)
+        # Lemma 3.2 over the whole array; significant elements (w > wbar_sub)
+        # are rejected inside the scan.
+        wbar_sub = self._pow((r - 2) * self.L)
+        subcritical_scan_into(self.elems, wbar_sub, self.c, W, rng, out)
+
+    # -- validation helpers (exercised by tests) ---------------------------------
+    def check_invariants(self) -> None:
+        if self.mode == _DIRECT:
+            return
+        n_in_buckets = 0
+        for j, bkt in self.buckets.items():
+            assert len(bkt) > 0, f"empty bucket {j} retained"
+            lo, hi = self._pow(j), self._pow(j + 1)
+            for k, w in bkt.arr.items():
+                assert lo < w <= hi, f"element {k!r} w={w} outside bucket {j}"
+            n_in_buckets += len(bkt)
+        assert n_in_buckets == len(self.elems)
+        for t, ch in self.chunks.items():
+            child_ids = set(dict(ch.child._items()))
+            expect = {j for j in self.buckets if self._chunk_of(j) == t}
+            assert child_ids == expect, f"chunk {t}: {child_ids} != {expect}"
+            w_sum = sum(self.buckets[j].total for j in expect)
+            assert math.isclose(ch.w, w_sum, rel_tol=1e-6, abs_tol=1e-6)
+            for j, w_norm in ch.child._items():
+                assert math.isclose(
+                    w_norm, self.buckets[j].total * ch.scale, rel_tol=1e-6, abs_tol=1e-6
+                )
+                assert w_norm > 1.0 - 1e-9, f"normalized weight {w_norm} <= 1"
+            ch.child.check_invariants()
+
+
+class DIPS:
+    """Public dynamic index: O(1) expected query/update, O(n) space.
+
+    >>> idx = DIPS({"a": 1.0, "b": 3.0}, c=1.0, seed=0)
+    >>> sample = idx.query()          # P[a] = 0.25, P[b] = 0.75
+    >>> idx.insert("c", 12.0)         # O(1) even though all probs changed
+    >>> idx.change_w("a", 4.0)
+    >>> _ = idx.delete("b")
+    """
+
+    def __init__(
+        self,
+        items: Optional[Dict[Key, float]] = None,
+        c: float = 1.0,
+        b: int = 4,
+        leaf_threshold: int = 16,
+        leaf_backend: str = "direct",
+        seed: Optional[int] = None,
+    ) -> None:
+        if not (0.0 < c <= 1.0):
+            raise ValueError(f"c must be in (0, 1], got {c}")
+        self.c = c
+        self.b = b
+        self._rng = np.random.default_rng(seed)
+        self._stream = RandomStream(self._rng)
+        self._weights: Dict[Key, float] = {}
+        self._zeros: set = set()
+        self._peak_weight: float = 1.0  # drift-tolerance scale for checks
+        positive: List[Tuple[Key, float]] = []
+        for k, w in (items or {}).items():
+            self._check_weight(w)
+            self._weights[k] = float(w)
+            if w > 0.0:
+                positive.append((k, float(w)))
+            else:
+                self._zeros.add(k)
+        self._node = PPSNode(
+            positive, b=b, c=c, threshold=leaf_threshold, leaf_backend=leaf_backend
+        )
+
+    def _check_weight(self, w: float) -> None:
+        if not (w >= 0.0) or math.isinf(w):
+            raise ValueError(f"weights must be finite and >= 0, got {w}")
+        if w > self._peak_weight:
+            self._peak_weight = float(w)
+
+    # -- dynamic operations --------------------------------------------------
+    def insert(self, key: Key, w: float) -> None:
+        if key in self._weights:
+            raise KeyError(f"duplicate key {key!r}")
+        self._check_weight(w)
+        self._weights[key] = float(w)
+        if w > 0.0:
+            self._node.insert(key, float(w))
+        else:
+            self._zeros.add(key)
+
+    def delete(self, key: Key) -> float:
+        w = self._weights.pop(key)
+        if key in self._zeros:
+            self._zeros.discard(key)
+        else:
+            self._node.delete(key)
+        return w
+
+    def change_w(self, key: Key, w_new: float) -> None:
+        self._check_weight(w_new)
+        w_old = self._weights[key]
+        self._weights[key] = float(w_new)
+        if w_old > 0.0 and w_new > 0.0:
+            self._node.change_w(key, float(w_new))
+        elif w_old > 0.0:  # -> zero
+            self._node.delete(key)
+            self._zeros.add(key)
+        elif w_new > 0.0:  # zero ->
+            self._zeros.discard(key)
+            self._node.insert(key, float(w_new))
+
+    # -- queries ------------------------------------------------------------
+    def query(self, rng: Optional[np.random.Generator] = None) -> List[Key]:
+        out: List[Key] = []
+        self._node.query_into(rng if rng is not None else self._stream, out)
+        return out
+
+    sample = query
+
+    # -- introspection --------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._weights)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._weights
+
+    def weight(self, key: Key) -> float:
+        return self._weights[key]
+
+    @property
+    def total_weight(self) -> float:
+        return self._node.total
+
+    def inclusion_probability(self, key: Key) -> float:
+        W = self._node.total
+        if W <= 0.0:
+            return 0.0
+        return self.c * self._weights[key] / W
+
+    def to_instance(self) -> PPSInstance:
+        return PPSInstance(dict(self._weights), c=self.c)
+
+    def check_invariants(self) -> None:
+        assert len(self._weights) == len(self._node) + len(self._zeros)
+        live = sum(w for w in self._weights.values() if w > 0.0)
+        # abs tolerance scales with the peak magnitude the accumulator saw
+        tol = max(1e-9, 1e-10 * self._peak_weight)
+        assert math.isclose(self._node.total, live, rel_tol=1e-6, abs_tol=tol)
+        self._node.check_invariants()

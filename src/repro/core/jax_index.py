@@ -1,0 +1,162 @@
+"""TPU-native adaptation of the DIPS bucket hierarchy (hardware adaptation).
+
+The paper's index is a pointer-rich host structure: hash maps, dynamic
+arrays, per-bucket geometric jumps.  None of that maps onto a systolic
+array.  What *does* transfer is the core insight -- partition by weight
+ranges so that (a) work concentrates in the few significant buckets and
+(b) per-bucket acceptance is at least ~1/b (bounded-ratio rejection,
+Lemma 3.1) -- which becomes an output-sensitive *batched* sampler on TPU:
+
+  1. Elements are bucketed by floor(log_b w) on device (sort once).
+  2. For each of B independent queries, the candidate count of bucket j is
+     Poisson(t_j * mu_j) with mu_j = -log(1 - pbar_j): by Poisson thinning,
+     per-element candidate counts are independent Poisson(mu_j), so after
+     accepting a candidate v with a_v = log(1-p_v)/log(1-pbar_j) <= 1 the
+     inclusion events are *exactly* independent with P[v in X] = p_v
+     (up to a 2^-24 probability clip; see tests for the statistical check).
+  3. Expected candidates per query: sum_j t_j*mu_j ~ b*c = O(1) -- the same
+     n -> "few significant ranges" reduction that gives DIPS its O(1)
+     query, re-expressed as fixed-shape tensor ops (Poisson counts +
+     gather + rejection) that jit, vmap and shard.
+
+Updates: ``change_w`` within a bucket is a device scatter (O(1), batchable);
+cross-bucket moves fall back to a host resync under the same doubling rule
+as the paper's Algorithm-4 rebuild.  See DESIGN.md "Hardware adaptation".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_P_CAP = 1.0 - 2.0**-24  # probability clip; keeps log1p finite
+
+
+class BucketedIndex(NamedTuple):
+    """Frozen device-side snapshot of the bucket decomposition."""
+
+    sorted_weights: jax.Array  # (n,) weights sorted by bucket id
+    sorted_ids: jax.Array      # (n,) original element ids, same order
+    bucket_start: jax.Array    # (m,) offset of each bucket in sorted order
+    bucket_count: jax.Array    # (m,) elements per bucket
+    bucket_wbar: jax.Array     # (m,) b^{j+1} upper bound per bucket
+    bucket_lo: jax.Array       # (m,) b^j lower bound (change_w validity)
+    total: jax.Array           # () sum of weights
+    b: int
+
+
+def build_bucketed_index(weights: np.ndarray | jax.Array, b: int = 4) -> BucketedIndex:
+    """Host-side build (sort by bucket), O(n log n) once."""
+    w = np.asarray(weights, dtype=np.float64)
+    if np.any(w <= 0):
+        raise ValueError("BucketedIndex requires strictly positive weights")
+    j = np.floor(np.log(w) / np.log(b)).astype(np.int64)
+    j = np.where(w <= np.power(float(b), j), j - 1, j)  # b^j < w <= b^{j+1}
+    order = np.argsort(j, kind="stable")
+    js = j[order]
+    uniq, start, count = np.unique(js, return_index=True, return_counts=True)
+    return BucketedIndex(
+        sorted_weights=jnp.asarray(w[order], dtype=jnp.float32),
+        sorted_ids=jnp.asarray(order, dtype=jnp.int32),
+        bucket_start=jnp.asarray(start, dtype=jnp.int32),
+        bucket_count=jnp.asarray(count, dtype=jnp.int32),
+        bucket_wbar=jnp.asarray(np.power(float(b), uniq + 1), dtype=jnp.float32),
+        bucket_lo=jnp.asarray(np.power(float(b), uniq), dtype=jnp.float32),
+        total=jnp.asarray(w.sum(), dtype=jnp.float32),
+        b=b,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "cap"))
+def bucketed_sample(
+    key: jax.Array,
+    index: BucketedIndex,
+    c: float = 1.0,
+    *,
+    batch: int = 1,
+    cap: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Draw ``batch`` independent PPS subsets; returns (ids[B, cap], count[B]).
+
+    Entries beyond ``count`` hold n (scatter-safe sentinel).  ``cap`` bounds
+    the candidates examined per query; expected candidates ~ b*c, so any
+    cap >> b*c makes truncation astronomically rare (surfaced via count).
+    """
+    m = index.bucket_start.shape[0]
+    n = index.sorted_ids.shape[0]
+    pbar = jnp.minimum(c * index.bucket_wbar / index.total, _P_CAP)  # (m,)
+    mu = -jnp.log1p(-pbar)  # per-element candidate rate
+    kc, kp, ka = jax.random.split(key, 3)
+
+    # 1) Poissonized candidate counts per (query, bucket).
+    lam = index.bucket_count.astype(jnp.float32) * mu  # (m,)
+    counts = jax.random.poisson(kc, jnp.broadcast_to(lam, (batch, m))).astype(jnp.int32)
+    counts = jnp.minimum(counts, cap)
+
+    # 2) Assign the `cap` candidate slots to buckets by cumulative counts.
+    cum = jnp.cumsum(counts, axis=1)  # (B, m)
+    slot = jnp.arange(cap)[None, :]
+    bucket_for_slot = jnp.sum(slot >= cum[:, :, None], axis=1)  # (B, cap) in [0, m]
+    valid = slot < cum[:, -1:]
+    bfs = jnp.minimum(bucket_for_slot, m - 1)
+
+    # 3) Uniform position inside the bucket (iid => Poisson thinning).
+    t_j = index.bucket_count[bfs]
+    u_pos = jax.random.uniform(kp, (batch, cap))
+    pos = index.bucket_start[bfs] + jnp.minimum((u_pos * t_j).astype(jnp.int32), t_j - 1)
+    w_cand = index.sorted_weights[pos]
+    ids_cand = index.sorted_ids[pos]
+
+    # 4) Thinning that makes marginals exact: accept with
+    #    a_v = log(1-p_v)/log(1-pbar_j)  (in (0, 1] since p_v <= pbar_j).
+    p_target = jnp.minimum(c * w_cand / index.total, _P_CAP)
+    a = jnp.log1p(-p_target) / (-mu[bfs])  # both factors negative => a > 0
+    accept = valid & (jax.random.uniform(ka, (batch, cap)) < a)
+
+    # 5) De-duplicate (an element may appear as several candidates) and
+    #    compact left; pad with n.
+    ids_masked = jnp.where(accept, ids_cand, n)
+    ids_sorted = jnp.sort(ids_masked, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((batch, 1), bool), ids_sorted[:, 1:] == ids_sorted[:, :-1]], axis=1
+    )
+    ids_unique = jnp.where(dup, n, ids_sorted)
+    ids_final = jnp.sort(ids_unique, axis=1)
+    cnt = jnp.sum(ids_final < n, axis=1).astype(jnp.int32)
+    return ids_final.astype(jnp.int32), cnt
+
+
+@jax.jit
+def bucketed_change_w(
+    index: BucketedIndex, element_id: jax.Array, w_new: jax.Array
+) -> Tuple[BucketedIndex, jax.Array]:
+    """In-bucket weight update as a device scatter (O(1) per update).
+
+    Returns (new_index, ok); ``ok`` is False when the new weight leaves the
+    element's bucket range, in which case the caller must resync/rebuild
+    (host wrapper: same amortized-doubling rule as Algorithm 4).
+    """
+    pos = jnp.argmax(index.sorted_ids == element_id)
+    old = index.sorted_weights[pos]
+    bucket = jnp.sum(index.bucket_start <= pos) - 1
+    ok = (w_new > index.bucket_lo[bucket]) & (w_new <= index.bucket_wbar[bucket])
+    new_w = jnp.where(ok, w_new, old)
+    return (
+        index._replace(
+            sorted_weights=index.sorted_weights.at[pos].set(new_w),
+            total=index.total + (new_w - old),
+        ),
+        ok,
+    )
+
+
+def marginal_probs(index: BucketedIndex, c: float = 1.0) -> jax.Array:
+    """Exact per-element inclusion probability in original id order."""
+    p_sorted = c * index.sorted_weights / index.total
+    n = index.sorted_ids.shape[0]
+    out = jnp.zeros(n, dtype=p_sorted.dtype)
+    return out.at[index.sorted_ids].set(p_sorted)

@@ -1,0 +1,97 @@
+"""Device-side batched Poisson pi-ps sampling in JAX.
+
+The host-side ``DIPS`` index answers *one* query in O(1); accelerators are
+instead asked for *batches* of independent queries (e.g. one subset per
+training example, or thousands of RR-set expansions per influence-
+maximization round).  This module provides the jit-compatible batched
+samplers used across the framework:
+
+  * ``pps_bernoulli_mask``   -- flat sampler: (B, n) boolean inclusion mask.
+    Work Theta(B*n); bandwidth-bound.  The Pallas kernel
+    ``repro.kernels.pps_sample`` fuses RNG + threshold so the mask is the
+    only HBM traffic (see kernels/pps_sample/ops.py).
+  * ``pps_sample_indices``   -- output-sensitive sampler returning padded
+    index lists; expected work Theta(B * c) after the bucket reduction of
+    ``jax_index.BucketedSampler``.
+  * ``pps_gradient_mask``    -- unbiased sparsification operator used by
+    the PPS gradient-compression hook (importance ~ |g|): element kept with
+    p_v = min(1, k*|g_v|/sum|g|) and scaled by 1/p_v.
+
+All functions are pure, take explicit PRNG keys, and are safe under jit,
+vmap, and shard_map (keys must be pre-split per shard).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def inclusion_probs(weights: jax.Array, c: float | jax.Array = 1.0) -> jax.Array:
+    """p_v = c * w_v / W with a zero-total guard."""
+    w = jnp.asarray(weights)
+    total = jnp.sum(w)
+    return jnp.where(total > 0, c * w / jnp.maximum(total, 1e-38), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def pps_bernoulli_mask(
+    key: jax.Array, weights: jax.Array, c: float | jax.Array = 1.0, *, batch: int = 1
+) -> jax.Array:
+    """(batch, n) bool mask; mask[b, v] ~ Bernoulli(c*w_v/W) independently."""
+    p = inclusion_probs(weights, c)
+    u = jax.random.uniform(key, (batch, p.shape[0]), dtype=jnp.float32)
+    return u < p[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "cap"))
+def pps_sample_indices(
+    key: jax.Array,
+    weights: jax.Array,
+    c: float | jax.Array = 1.0,
+    *,
+    batch: int = 1,
+    cap: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Padded index-list form: (idx[B, cap] int32, count[B] int32).
+
+    Entries beyond ``count`` are set to n (an out-of-range sentinel usable
+    directly for segment-sum style scatters).  Overflow beyond ``cap``
+    truncates deterministically from the left (tests size cap >> E|X| = c).
+    """
+    n = weights.shape[0]
+    mask = pps_bernoulli_mask(key, weights, c, batch=batch)
+    # Stable compaction: positions of hits, padded with n.
+    order = jnp.argsort(~mask, axis=1, stable=True)  # hits first
+    count = jnp.sum(mask, axis=1).astype(jnp.int32)
+    idx = jnp.where(jnp.arange(n)[None, :] < count[:, None], order, n)
+    return idx[:, :cap].astype(jnp.int32), jnp.minimum(count, cap)
+
+
+@jax.jit
+def pps_gradient_mask(
+    key: jax.Array, grads: jax.Array, k: float | jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Poisson pi-ps gradient sparsification (unbiased).
+
+    Keeps coordinate v with probability p_v = min(1, k*|g_v|/sum|g|) and
+    rescales survivors by 1/p_v, so E[out] = grads exactly; expected number
+    of survivors is <= k.  Returns (sparsified_grads, keep_mask).
+    """
+    g = grads.reshape(-1)
+    mag = jnp.abs(g)
+    total = jnp.sum(mag)
+    p = jnp.minimum(1.0, k * mag / jnp.maximum(total, 1e-38))
+    u = jax.random.uniform(key, g.shape, dtype=jnp.float32)
+    keep = u < p
+    safe_p = jnp.maximum(p, 1e-38)
+    out = jnp.where(keep, g / safe_p, 0.0)
+    return out.reshape(grads.shape), keep.reshape(grads.shape)
+
+
+def expected_sample_size(weights: jax.Array, c: float | jax.Array = 1.0) -> jax.Array:
+    """E|X| = sum_v c*w_v/W = c (whenever W > 0)."""
+    return jnp.sum(inclusion_probs(weights, c))

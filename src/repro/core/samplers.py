@@ -1,0 +1,272 @@
+"""Building-block samplers (paper Sec 3.1, Appendix A).
+
+``DynamicWeightedArray`` is the dynamic-array + hash-table structure used by
+every building block (Algorithm 3): O(1) insert / delete (swap-with-last) /
+change_w, with positions tracked in a hash map.
+
+``jump_scan`` is the geometric candidate scan at the heart of Lemma 3.1
+(bounded weight ratio) and Lemma 3.2 (subcritical weight): every array
+position is a *candidate* independently with probability ``p_bar`` (an upper
+bound of all true inclusion probabilities); candidates are visited via
+truncated-geometric jumps in O(1) expected time per candidate, and each
+candidate is kept with probability ``target/p_bar`` (rejection sampling).
+
+Expected query cost:
+  * Lemma 3.1 (weights in (wbar/b, wbar]):   E[candidates] <= b*c = O(1).
+  * Lemma 3.2 (weights <= wbar = O(W_S/n^2)): E[candidates] = O(1/n).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .pps import any_success_probability, Key
+
+
+class DynamicWeightedArray:
+    """Dynamic array of (key, weight) with O(1) ops (Algorithm 3 lines 1-18)."""
+
+    __slots__ = ("keys", "weights", "pos", "total")
+
+    def __init__(self, items: Iterable[Tuple[Key, float]] = ()) -> None:
+        self.keys: List[Key] = []
+        self.weights: List[float] = []
+        self.pos: Dict[Key, int] = {}
+        self.total: float = 0.0
+        for k, w in items:
+            self.insert(k, w)
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self.pos
+
+    def weight(self, key: Key) -> float:
+        return self.weights[self.pos[key]]
+
+    def insert(self, key: Key, w: float) -> None:
+        if key in self.pos:
+            raise KeyError(f"duplicate key {key!r}")
+        self.pos[key] = len(self.keys)
+        self.keys.append(key)
+        self.weights.append(w)
+        self.total += w
+
+    def change_w(self, key: Key, w: float) -> float:
+        i = self.pos[key]
+        old = self.weights[i]
+        self.weights[i] = w
+        self.total += w - old
+        return old
+
+    def delete(self, key: Key) -> float:
+        i = self.pos.pop(key)
+        w = self.weights[i]
+        last_k = self.keys[-1]
+        last_w = self.weights[-1]
+        if last_k != key:
+            self.keys[i] = last_k
+            self.weights[i] = last_w
+            self.pos[last_k] = i
+        self.keys.pop()
+        self.weights.pop()
+        self.total -= w
+        if not self.keys:
+            self.total = 0.0  # snap float-drift to exact zero when empty
+        return w
+
+    def recompute_total(self) -> None:
+        """Refresh the float accumulator (done on rebuilds to kill drift)."""
+        self.total = float(sum(self.weights))
+
+    def items(self) -> Iterable[Tuple[Key, float]]:
+        return zip(self.keys, self.weights)
+
+
+def jump_scan(
+    arr: DynamicWeightedArray,
+    p_bar: float,
+    accept: Callable[[Key, float, float], bool],
+    rng: np.random.Generator,
+    out: List[Key],
+) -> int:
+    """Candidate scan of Algorithm 3 ``query()`` with an exact gate.
+
+    Every position of ``arr`` is a candidate independently with probability
+    ``p_bar``.  ``accept(key, weight, u)`` decides whether a candidate (with
+    ``u ~ Uniform(0,1)``) enters ``out``; it must implement rejection with
+    probability ``target_p / p_bar`` for correctness.
+
+    Returns the number of candidates visited (for cost accounting).
+    """
+    t = len(arr)
+    if t == 0 or p_bar <= 0.0:
+        return 0
+    keys = arr.keys
+    weights = arr.weights
+    visited = 0
+    if p_bar >= 1.0:
+        # Degenerate: every position is a candidate.
+        for i in range(t):
+            if accept(keys[i], weights[i], rng.random()):
+                out.append(keys[i])
+        return t
+    q = any_success_probability(p_bar, t)
+    if rng.random() > q:
+        return 0
+    log1m = math.log1p(-p_bar)
+    # First candidate: truncated geometric with parameters (p_bar, q); the
+    # exact gate guarantees support [0, t).
+    j = int(math.log1p(-q * rng.random()) // log1m)
+    if j >= t:  # float guard at the support boundary
+        j = t - 1
+    while j < t:
+        visited += 1
+        if accept(keys[j], weights[j], rng.random()):
+            out.append(keys[j])
+        j += 1 + int(math.log1p(-rng.random()) // log1m)
+    return visited
+
+
+class BoundedRatioSampler:
+    """Lemma 3.1: weights of T within (wbar/b, wbar] for a constant b.
+
+    The sampler answers sub-queries of the composed structure: each element
+    v must enter the output with probability ``scale * w(v)`` where
+    ``scale * wbar <= p_cap <= 1``.  For a bucket B used inside Lemma 3.3,
+    ``scale = c * thin / w(B)`` (the bucket-local probability times the
+    chunk thinning factor), and the candidate bound is
+    ``p_bar = min(1, c * wbar / w(B))``.
+    """
+
+    __slots__ = ("arr", "wbar")
+
+    def __init__(self, wbar: float, items: Iterable[Tuple[Key, float]] = ()) -> None:
+        self.arr = DynamicWeightedArray(items)
+        self.wbar = wbar
+
+    # -- dynamic ops (all O(1)) -------------------------------------------
+    def insert(self, key: Key, w: float) -> None:
+        self.arr.insert(key, w)
+
+    def delete(self, key: Key) -> float:
+        return self.arr.delete(key)
+
+    def change_w(self, key: Key, w: float) -> float:
+        return self.arr.change_w(key, w)
+
+    def __len__(self) -> int:
+        return len(self.arr)
+
+    @property
+    def total(self) -> float:
+        return self.arr.total
+
+    # -- query -------------------------------------------------------------
+    def query_into(
+        self,
+        c: float,
+        thin: float,
+        rng: np.random.Generator,
+        out: List[Key],
+    ) -> int:
+        """Append a PPS sample to ``out``.
+
+        Element v is included with probability ``thin * c * w(v) / total``
+        (``thin`` folds the chunk-level thinning of Algorithm 1 line 26 into
+        the bucket-level rejection, saving one uniform per element).
+        """
+        W = self.arr.total
+        if W <= 0.0:
+            return 0
+        p_bar = c * self.wbar / W
+        if p_bar > 1.0:
+            p_bar = 1.0
+        scale = thin * c / (W * p_bar)
+
+        def accept(key: Key, w: float, u: float) -> bool:
+            return u < scale * w
+
+        return jump_scan(self.arr, p_bar, accept, rng, out)
+
+
+def subcritical_scan_into(
+    arr: DynamicWeightedArray,
+    wbar: float,
+    c: float,
+    W_total: float,
+    rng: np.random.Generator,
+    out: List[Key],
+) -> int:
+    """Lemma 3.2 query over the *global* element array.
+
+    Elements with weight > ``wbar`` (members of significant chunks, handled
+    by the bucket/chunk path) are rejected outright; elements with weight
+    <= wbar are kept with probability ``c*w/(W_total * p_bar)``.  Because
+    ``wbar = O(W_total / n^2)``, the expected number of candidates is
+    O(1/n): keeping one array over *all* elements (rather than a separate
+    pool of non-significant elements) is what makes promotion/demotion of
+    whole chunks free when the top chunk index r moves.  See DESIGN.md.
+    """
+    if W_total <= 0.0 or len(arr) == 0:
+        return 0
+    p_bar = c * wbar / W_total
+    if p_bar > 1.0:
+        p_bar = 1.0
+    inv = c / (W_total * p_bar)
+
+    def accept(key: Key, w: float, u: float) -> bool:
+        if w > wbar:
+            return False  # significant element: other path samples it
+        return u < inv * w
+
+    return jump_scan(arr, p_bar, accept, rng, out)
+
+
+class DirectSampler:
+    """Exact per-element Bernoulli sampler for O(1)-size leaf instances.
+
+    After two rounds of size reduction the instance has O(log log n)
+    elements, so scanning it is O(1); the materialized lookup table of
+    Lemma 3.4 (``table_lookup.py``) trades this scan for a single table
+    probe and is validated against this sampler.
+    """
+
+    __slots__ = ("arr",)
+
+    def __init__(self, items: Iterable[Tuple[Key, float]] = ()) -> None:
+        self.arr = DynamicWeightedArray(items)
+
+    def insert(self, key: Key, w: float) -> None:
+        self.arr.insert(key, w)
+
+    def delete(self, key: Key) -> float:
+        return self.arr.delete(key)
+
+    def change_w(self, key: Key, w: float) -> float:
+        return self.arr.change_w(key, w)
+
+    def __len__(self) -> int:
+        return len(self.arr)
+
+    @property
+    def total(self) -> float:
+        return self.arr.total
+
+    def query_into(self, c: float, rng: np.random.Generator, out: List[Key]) -> None:
+        W = self.arr.total
+        if W <= 0.0:
+            return
+        inv = c / W
+        keys = self.arr.keys
+        weights = self.arr.weights
+        for i in range(len(keys)):
+            if rng.random() < inv * weights[i]:
+                out.append(keys[i])
+
+    def items(self) -> Iterable[Tuple[Key, float]]:
+        return self.arr.items()

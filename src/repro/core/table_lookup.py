@@ -1,0 +1,207 @@
+"""Table lookup for O(log log n)-size PPS instances (paper Lemma 3.4).
+
+After two rounds of size reduction the instance ``Phi^o = <S^o, w^o>`` has
+``m = O(log_b log_b n)`` elements whose weights lie in ``(1, b^{dm}]``.  The
+paper rounds every weight up to ``wbar(v) = ceil(w(v))``, encodes the rounded
+weight vector as a radix-r number ``lambda`` (r > max possible wbar), and for
+each ``lambda`` materializes an array ``A_lambda`` of ``(Wbar - m)^m``
+entries so that a uniformly random entry is a subset T drawn with
+
+    pbar(T) = prod_{v in T} wbar(v)/(Wbar-m)
+            * prod_{u notin T} (Wbar-m-wbar(u))/(Wbar-m).
+
+Rejection sampling (accept v in T iff U < c*w(v)/wbar(v) * (Wbar-m)/W)
+corrects the overestimation, so each element lands in the output with
+probability exactly ``c*w(v)/W`` -- despite the weight correlation that
+makes naive rounding biased (paper Example 3.5).
+
+Key observation (also how we validate the table): ``pbar`` *factorizes*, so
+drawing T is equivalent to m independent Bernoulli(wbar(v)/(Wbar-m)) draws.
+The materialized table is the O(1)-time theoretical device; the factorized
+backend is its distribution-identical O(m)-time twin used when a table would
+exceed the memory budget.  Both are exposed and cross-validated in tests.
+
+``change_w`` updates ``lambda`` with the generalized bit operation of the
+paper (Algorithm 2 line 16): lambda <- floor(lambda/r^v)*r^v
++ ceil(w)*r^{v-1} + lambda mod r^{v-1}.  Tables are built lazily per lambda
+and memoized, so repeated weight states reuse their array.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Hashable, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .pps import Key
+from .samplers import DynamicWeightedArray
+
+
+class RoundedLookup:
+    """Lemma 3.4 structure over a fixed small element set.
+
+    Parameters
+    ----------
+    items: (key, weight) pairs; weights must be > 1 (guaranteed by the
+        normalization of Lemma 3.3: chunk-local weights lie in (1, b*n^2]).
+    radix: the paper's ``r = b^{dm}``; any integer strictly greater than
+        every possible rounded weight is equivalent.
+    max_table_entries: memory budget; a lambda whose array would exceed it
+        is served by the factorized backend instead.
+    """
+
+    def __init__(
+        self,
+        items: Iterable[Tuple[Key, float]],
+        radix: int = 1 << 20,
+        max_table_entries: int = 1 << 22,
+        use_materialized: bool = True,
+    ) -> None:
+        items = list(items)
+        self.slots: List[Key] = [k for k, _ in items]
+        self.slot_of: Dict[Key, int] = {k: i for i, (k, _) in enumerate(items)}
+        self.w: List[float] = [float(w) for _, w in items]
+        self.radix = int(radix)
+        self.max_table_entries = int(max_table_entries)
+        self.use_materialized = use_materialized
+        self._tables: Dict[int, Optional[np.ndarray]] = {}
+        self._recompute()
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _recompute(self) -> None:
+        self.m = len(self.w)
+        self.wbar = [int(math.ceil(wi)) for wi in self.w]
+        self.W = float(sum(self.w))
+        self.Wbar = int(sum(self.wbar))
+        self.lam = 0
+        for i in range(self.m - 1, -1, -1):  # lambda = (wbar(m)...wbar(1))_r
+            self.lam = self.lam * self.radix + self.wbar[i]
+
+    @property
+    def total(self) -> float:
+        return self.W
+
+    def __len__(self) -> int:
+        return self.m
+
+    def is_valid(self) -> bool:
+        """Lemma 3.4 preconditions: m >= 2, all w > 1, probs <= 1, r big enough."""
+        if self.m < 2:
+            return False
+        denom = self.Wbar - self.m
+        if denom <= 0:
+            return False
+        for wi, wb in zip(self.w, self.wbar):
+            if not (wi > 1.0) or wb >= self.radix or wb > denom:
+                return False
+        return True
+
+    # -- dynamic ops -----------------------------------------------------------
+    def change_w(self, key: Key, w_new: float) -> None:
+        """O(1): digit surgery on lambda (paper Algorithm 2, change_w)."""
+        i = self.slot_of[key]
+        new_digit = int(math.ceil(w_new))
+        old_digit = self.wbar[i]
+        self.W += w_new - self.w[i]
+        self.Wbar += new_digit - old_digit
+        r_i = self.radix**i  # r^{v-1} with 0-based slots
+        self.lam = (
+            (self.lam // (r_i * self.radix)) * (r_i * self.radix)
+            + new_digit * r_i
+            + self.lam % r_i
+        )
+        self.w[i] = float(w_new)
+        self.wbar[i] = new_digit
+
+    def insert(self, key: Key, w: float) -> None:
+        # Beyond Lemma 3.4's interface (the composed index sizes the leaf
+        # set statically); supported by re-encoding in O(m) = O(log log n).
+        self.slot_of[key] = len(self.slots)
+        self.slots.append(key)
+        self.w.append(float(w))
+        self._recompute()
+
+    def delete(self, key: Key) -> float:
+        i = self.slot_of.pop(key)
+        w = self.w[i]
+        last = len(self.slots) - 1
+        if i != last:
+            self.slots[i] = self.slots[last]
+            self.w[i] = self.w[last]
+            self.slot_of[self.slots[i]] = i
+        self.slots.pop()
+        self.w.pop()
+        self._recompute()
+        return w
+
+    def items(self) -> Iterable[Tuple[Key, float]]:
+        return zip(self.slots, self.w)
+
+    # -- table construction ------------------------------------------------------
+    def _build_table(self) -> Optional[np.ndarray]:
+        """Materialize A_lambda: entry -> subset bitmask (paper Example 3.6)."""
+        denom = self.Wbar - self.m
+        size = denom**self.m
+        if size <= 0 or size > self.max_table_entries or self.m > 16:
+            return None
+        table = np.empty(size, dtype=np.uint32)
+        pos = 0
+        for mask in range(1 << self.m):
+            cnt = 1
+            for i in range(self.m):
+                cnt *= self.wbar[i] if (mask >> i) & 1 else denom - self.wbar[i]
+            if cnt > 0:
+                table[pos : pos + cnt] = mask
+                pos += cnt
+        assert pos == size, f"table fill mismatch: {pos} != {size}"
+        return table
+
+    def _table_for_lambda(self) -> Optional[np.ndarray]:
+        if self.lam not in self._tables:
+            self._tables[self.lam] = self._build_table()
+        return self._tables[self.lam]
+
+    # -- query ---------------------------------------------------------------
+    def query_into(self, c: float, rng: np.random.Generator, out: List[Key]) -> None:
+        if self.m == 0 or self.W <= 0.0:
+            return
+        denom = self.Wbar - self.m
+        if not self.is_valid():
+            # Degenerate leaf (single element / integer-boundary weights):
+            # exact per-element Bernoulli, still O(m) = O(1) at the leaf.
+            inv = c / self.W
+            for i in range(self.m):
+                if rng.random() < inv * self.w[i]:
+                    out.append(self.slots[i])
+            return
+        table = self._table_for_lambda() if self.use_materialized else None
+        if table is not None:
+            mask = int(table[rng.integers(0, len(table))])
+        else:
+            # Factorized twin of the table: identical distribution.
+            mask = 0
+            for i in range(self.m):
+                if rng.random() * denom < self.wbar[i]:
+                    mask |= 1 << i
+        # Rejection correcting the rounded-up probabilities.
+        corr = c * denom / self.W
+        i = 0
+        while mask:
+            if mask & 1:
+                if rng.random() * self.wbar[i] < corr * self.w[i]:
+                    out.append(self.slots[i])
+            mask >>= 1
+            i += 1
+
+    # -- exact distribution (for tests) --------------------------------------
+    def subset_distribution(self) -> Dict[int, float]:
+        """Exact pbar over subsets (bitmask -> probability), from the table math."""
+        denom = self.Wbar - self.m
+        dist: Dict[int, float] = {}
+        for mask in range(1 << self.m):
+            p = 1.0
+            for i in range(self.m):
+                p *= (self.wbar[i] / denom) if (mask >> i) & 1 else (denom - self.wbar[i]) / denom
+            dist[mask] = p
+        return dist

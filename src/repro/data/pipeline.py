@@ -1,0 +1,137 @@
+"""DIPS-driven importance-sampling data pipeline (the paper's technique as
+a first-class training feature).
+
+A pool of documents carries per-example weights (e.g. an EMA of recent
+loss).  Every batch is assembled by repeated Poisson pi-ps queries against
+the DIPS index -- each query costs O(1) -- and after the step the trainer
+feeds per-example losses back via ``update_weights``, each an O(1)
+``change_w``.  This is exactly the dynamic regime the paper targets: a
+single weight update changes *every* inclusion probability, yet the index
+never rebuilds.  A subset-sampling-based pipeline would pay O(pool) per
+weight update (see benchmarks/bench_pipeline.py for the measured gap).
+
+Two estimator modes:
+  * curriculum (default): plain loss-proportional sampling (biased toward
+    hard examples, standard loss-based curriculum).
+  * unbiased: records q_i = P[example i sampled] with every batch so the
+    trainer can importance-correct the loss (w_i = 1/(pool * q_i)).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.dips import DIPS
+from . import synthetic
+
+
+class DIPSSamplingPipeline:
+    def __init__(
+        self,
+        pool_size: int,
+        seq_len: int,
+        vocab: int,
+        seed: int = 0,
+        c: float = 1.0,
+        min_weight: float = 1e-3,
+        max_weight: float = 1e3,
+        ema: float = 0.9,
+        doc_fn: Optional[Callable[[int, int, int, int], np.ndarray]] = None,
+    ) -> None:
+        self.pool_size = pool_size
+        self.seq_len = seq_len
+        self.vocab = vocab
+        self.seed = seed
+        self.min_weight = min_weight
+        self.max_weight = max_weight
+        self.ema = ema
+        self._doc_fn = doc_fn or synthetic.synth_document
+        self._weights = np.ones(pool_size, np.float64)
+        self._index = DIPS({i: 1.0 for i in range(pool_size)}, c=c, seed=seed)
+        self._rng = np.random.default_rng(seed + 1)
+        self._lock = threading.Lock()
+        self.query_count = 0
+
+    # -- sampling ------------------------------------------------------------
+    def sample_ids(self, batch: int) -> np.ndarray:
+        """B distinct example ids via repeated O(1) PPS queries."""
+        out: List[int] = []
+        seen = set()
+        with self._lock:
+            while len(out) < batch:
+                self.query_count += 1
+                for k in self._index.query():
+                    if k not in seen:
+                        seen.add(k)
+                        out.append(k)
+                        if len(out) == batch:
+                            break
+        return np.asarray(out[:batch], np.int64)
+
+    def batch(self, batch: int) -> Dict[str, np.ndarray]:
+        ids = self.sample_ids(batch)
+        toks = np.stack([
+            self._doc_fn(self.seed, int(i), self.seq_len + 1, self.vocab)
+            for i in ids
+        ])
+        W = self._index.total_weight
+        q = np.asarray([self._weights[i] for i in ids]) / max(W, 1e-30)
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+            "example_ids": ids,
+            "sample_probs": q,  # for the unbiased estimator mode
+        }
+
+    # -- feedback (the dynamic updates) ----------------------------------------
+    def update_weights(self, ids: np.ndarray, losses: np.ndarray) -> None:
+        """O(1) change_w per example -- the paper's dynamic operation."""
+        with self._lock:
+            for i, loss in zip(ids, losses):
+                i = int(i)
+                w_old = self._weights[i]
+                w_new = self.ema * w_old + (1 - self.ema) * float(loss)
+                w_new = float(np.clip(w_new, self.min_weight, self.max_weight))
+                self._weights[i] = w_new
+                self._index.change_w(i, w_new)
+
+    def add_document(self, doc_id: int, weight: float = 1.0) -> None:
+        with self._lock:
+            self._weights = (
+                np.append(self._weights, weight)
+                if doc_id >= len(self._weights) else self._weights
+            )
+            self._index.insert(doc_id, weight)
+
+    def remove_document(self, doc_id: int) -> None:
+        with self._lock:
+            self._index.delete(doc_id)
+
+    # -- checkpointing ------------------------------------------------------------
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        return {"weights": self._weights.copy()}
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        w = state["weights"]
+        with self._lock:
+            self._weights = w.copy()
+            self._index = DIPS(
+                {i: float(max(w[i], self.min_weight)) for i in range(len(w))},
+                c=self._index.c, seed=self.seed)
+
+
+class StaticPipeline:
+    """Uniform step-indexed pipeline (deterministic resume baseline)."""
+
+    def __init__(self, batch: int, seq_len: int, vocab: int, seed: int = 0) -> None:
+        self.batch_size = batch
+        self.seq_len = seq_len
+        self.vocab = vocab
+        self.seed = seed
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        return synthetic.batch_for_step(
+            self.seed, step, self.batch_size, self.seq_len, self.vocab)

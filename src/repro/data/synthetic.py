@@ -1,0 +1,62 @@
+"""Deterministic synthetic LM data.
+
+Documents are generated from a counter-mode hash (stable across runs and
+hosts), so any (step, seed) pair maps to the same batch on every worker --
+which is what makes checkpoint-resume exactly reproducible and lets the
+elastic tests compare runs across different device counts.
+
+The token stream has learnable structure (a noisy order-2 Markov chain over
+a banded transition table) so small models show decreasing loss within a
+few hundred steps.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+def _doc_rng(seed: int, doc_id: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, doc_id]))
+
+
+def synth_document(seed: int, doc_id: int, length: int, vocab: int) -> np.ndarray:
+    """Order-1 structured sequence over a small active alphabet.
+
+    80% of transitions follow a fixed deterministic map on K = min(64,
+    vocab) active tokens, so a small model sees every context often enough
+    to drop the loss well below ln(vocab) within tens of steps.
+    """
+    rng = _doc_rng(seed, doc_id)
+    K = min(64, vocab)
+    toks = np.empty(length, np.int32)
+    toks[0] = rng.integers(K)
+    noise = rng.random(length)
+    jumps = rng.integers(0, K, length)
+    for i in range(1, length):
+        if noise[i] < 0.8:
+            toks[i] = (toks[i - 1] * 31 + 7) % K
+        else:
+            toks[i] = jumps[i]
+    return toks
+
+
+def batch_for_step(
+    seed: int, step: int, batch: int, seq_len: int, vocab: int
+) -> Dict[str, np.ndarray]:
+    """Pure function (step -> batch): the basis of deterministic resume."""
+    tokens = np.stack([
+        synth_document(seed, step * batch + b, seq_len + 1, vocab)
+        for b in range(batch)
+    ])
+    return {"tokens": tokens[:, :-1].astype(np.int32),
+            "labels": tokens[:, 1:].astype(np.int32)}
+
+
+def token_iterator(seed: int, batch: int, seq_len: int, vocab: int,
+                   start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    while True:
+        yield batch_for_step(seed, step, batch, seq_len, vocab)
+        step += 1

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+pps_sample/       fused batched Poisson pi-ps Bernoulli sampling
+                  (VMEM-resident PRNG + threshold; the paper's workload
+                  as a memory-roofline-optimal TPU kernel)
+flash_attention/  causal / sliding-window / GQA forward attention
+                  (online softmax, banded block skip)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes and assert against the oracle in interpret mode.
+"""

@@ -1,0 +1,148 @@
+"""Pallas TPU flash-attention forward kernel (causal + sliding window + GQA).
+
+Canonical Mosaic tiling: grid = (B*Hq, nQ, nK) with VMEM scratch carrying
+the online-softmax state (m, l, acc) across the kK dimension:
+
+  ki == 0        : init  m = -inf, l = 0, acc = 0
+  every ki       : s = q k^T * scale; mask; online rescale; acc += p v
+  ki == nK - 1   : out = acc / l     (0 where a row saw no valid key)
+
+Blocks irrelevant under the causal/window band are skipped with pl.when --
+the MXU work per q block is O(band width), which is what makes the
+sliding-window archs (mixtral, h2o-danube) sub-quadratic and the 500k-token
+decode shapes feasible.  (A production variant would shrink the grid to the
+band instead of predicating; the predicated form keeps index maps rectangular
+and is what we validate in interpret mode.  See EXPERIMENTS.md #Perf.)
+
+GQA is expressed through the K/V index maps: q-head h reads kv-head
+h // group, so K/V tiles are fetched once per group rather than repeated.
+
+VMEM budget per grid point (f32): q (TQ, D) + k,v (TK, D) + acc (TQ, D)
++ m,l (TQ, 128).  Defaults TQ = TK = 256, D <= 256 => < 2 MiB, leaving
+room for double buffering on a 16 MiB core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_TQ = 256
+DEFAULT_TK = 256
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, offset: int, kv_len: int,
+    tq: int, tk: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Band test at block granularity (static offset, traced block ids).
+    q_lo = qi * tq + offset
+    q_hi = q_lo + tq - 1
+    k_lo = ki * tk
+    relevant = k_lo < kv_len
+    if causal:
+        relevant &= k_lo <= q_hi
+    if window and window > 0:
+        relevant &= (k_lo + tk - 1) > (q_lo - window)
+
+    @pl.when(relevant)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)  # (TQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (TK, D)
+        v = v_ref[0].astype(jnp.float32)  # (TK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (TQ, TK)
+
+        q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        mask = k_ids < kv_len
+        if causal:
+            mask &= k_ids <= q_ids
+        if window and window > 0:
+            mask &= (q_ids - k_ids) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                       # (TQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)   # (TQ, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                      # (TQ, TK)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)              # (TQ, 1)
+        l_new = l_scr[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        safe = jnp.maximum(l, 1e-30)
+        o_ref[0] = (acc_scr[...] / safe * (l > 0)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group", "scale", "causal", "window", "kv_len", "offset", "tq", "tk",
+        "interpret",
+    ),
+)
+def flash_attention_call(
+    q: jax.Array,  # (B*Hq, Tq_pad, D)
+    k: jax.Array,  # (B*Hkv, Tk_pad, D)
+    v: jax.Array,  # (B*Hkv, Tk_pad, D)
+    *,
+    group: int,
+    scale: float,
+    causal: bool,
+    window: int,
+    kv_len: int,
+    offset: int,   # kv_len - true_q_len (decode alignment)
+    tq: int = DEFAULT_TQ,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+) -> jax.Array:
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    grid = (BH, Tq // tq, Tk // tk)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        offset=offset, kv_len=kv_len, tq=tq, tk=tk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, tk, D), lambda h, qi, ki: (h // group, ki, 0)),
+            pl.BlockSpec((1, tk, D), lambda h, qi, ki: (h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 128), jnp.float32),
+            pltpu.VMEM((tq, 128), jnp.float32),
+            pltpu.VMEM((tq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

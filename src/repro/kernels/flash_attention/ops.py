@@ -1,0 +1,64 @@
+"""Public jit'd wrapper for the flash-attention kernel.
+
+Accepts (B, Hq, Tq, D) / (B, Hkv, Tk, D) tensors, handles GQA flattening,
+seq padding to tile multiples, and decode alignment (Tq < Tk means the
+queries are the *last* Tq positions).  ``interpret=True`` (default) runs the
+kernel body on CPU for validation; the TPU launcher flips it off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_TK, DEFAULT_TQ, flash_attention_call
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "tq", "tk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Tq, D)
+    k: jax.Array,  # (B, Hkv, Tk, D)
+    v: jax.Array,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    tq: int = DEFAULT_TQ,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    scale = 1.0 / (D**0.5)
+    tq_eff = min(tq, _round_up(Tq))
+    tk_eff = min(tk, _round_up(Tk))
+
+    qf = _pad_axis(q.reshape(B * Hq, Tq, D), tq_eff, 1)
+    kf = _pad_axis(k.reshape(B * Hkv, Tk, D), tk_eff, 1)
+    vf = _pad_axis(v.reshape(B * Hkv, Tk, D), tk_eff, 1)
+
+    out = flash_attention_call(
+        qf, kf, vf,
+        group=group, scale=scale, causal=causal, window=window,
+        kv_len=Tk, offset=Tk - Tq, tq=tq_eff, tk=tk_eff, interpret=interpret,
+    )
+    return out[:, :Tq].reshape(B, Hq, Tq, D)
+
+
+def _round_up(n: int, mult: int = 128) -> int:
+    return ((n + mult - 1) // mult) * mult

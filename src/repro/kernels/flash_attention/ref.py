@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Dense softmax attention with causal / sliding-window / GQA semantics
+identical to the kernel: query position i (global index ``i + offset``
+where ``offset = kv_len - q_len``) may attend key j iff
+
+    j <= i + offset                         (causal)
+    and (window <= 0 or i + offset - j < window)   (sliding window)
+    and j < kv_len                          (key padding)
+
+Softmax is computed in float32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Tq, D)
+    k: jax.Array,  # (B, Hkv, Tk, D)
+    v: jax.Array,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * scale
+    Tk = k.shape[2]
+    offset = Tk - Tq
+    qi = jnp.arange(Tq)[:, None] + offset
+    kj = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window and window > 0:
+        mask &= qi - kj < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (possible with tiny windows) -> zeros
+    any_valid = mask.any(-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    out = jnp.where(any_valid, out, 0.0)
+    return out.astype(q.dtype)

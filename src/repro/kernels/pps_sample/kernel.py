@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused batched Poisson pi-ps Bernoulli sampling.
+
+Motivation (roofline): the flat batched sampler is pure memory traffic.
+The naive XLA lowering materializes (B, n) float32 uniforms in HBM
+(4 bytes), re-reads them (4), and writes the mask (1) => ~9 bytes/cell.
+This kernel generates random bits *inside* VMEM with the TPU hardware PRNG
+and streams out only the int8 mask plus the (n,) weights => ~(1 + 4/B)
+bytes/cell, an ~8x cut of the memory-roofline term (EXPERIMENTS.md #Perf).
+
+Two entry points share the threshold/compare body:
+  * ``pps_mask_kernel_fused``: pltpu.prng_seed / prng_random_bits per tile
+    (TPU target; interpret mode stubs the PRNG to zeros, so statistical
+    validation of this path runs on real hardware only).
+  * ``pps_mask_kernel_bits``: random bits arrive as an input operand --
+    bit-exact against ``ref.pps_mask_ref`` on CPU (interpret=True tests).
+
+Tiling: grid (B/TB, n/TN); weights block (1, TN) is broadcast down the
+batch-tile rows; mask block (TB, TN) int8.  TN defaults to 512 lanes
+(4 * 128) and TB to 256 sublanes -- a (256, 512) int8 tile is 128KiB in
+VMEM, comfortably under the ~16MiB/core budget with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import TWO32
+
+DEFAULT_TB = 256
+DEFAULT_TN = 512
+
+
+def _threshold_tile(w_tile: jax.Array, scale: jax.Array) -> jax.Array:
+    p = jnp.minimum(w_tile.astype(jnp.float32) * scale, 1.0)
+    t = jnp.minimum(p * jnp.float32(TWO32), jnp.float32(TWO32 - 256.0))
+    return t.astype(jnp.uint32)
+
+
+def _mask_body(w_ref, scale_ref, bits, o_ref):
+    t = _threshold_tile(w_ref[...], scale_ref[0])  # (1, TN)
+    o_ref[...] = (bits < t).astype(jnp.int8)
+
+
+def pps_mask_kernel_bits(w_ref, scale_ref, bits_ref, o_ref):
+    """Validation path: bits supplied as an operand."""
+    _mask_body(w_ref, scale_ref, bits_ref[...], o_ref)
+
+
+def pps_mask_kernel_fused(w_ref, scale_ref, seed_ref, o_ref):
+    """TPU path: per-tile hardware PRNG; seed derived from the grid point."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    pltpu.prng_seed(seed_ref[0] + i * nj + j)
+    bits = pltpu.prng_random_bits(o_ref.shape)
+    _mask_body(w_ref, scale_ref, bits, o_ref)
+
+
+def _specs(tb: int, tn: int, fused: bool):
+    w_spec = pl.BlockSpec((1, tn), lambda i, j: (0, j))
+    scale_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    o_spec = pl.BlockSpec((tb, tn), lambda i, j: (i, j))
+    if fused:
+        seed_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+        return [w_spec, scale_spec, seed_spec], o_spec
+    bits_spec = pl.BlockSpec((tb, tn), lambda i, j: (i, j))
+    return [w_spec, scale_spec, bits_spec], o_spec
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tb", "tn", "interpret")
+)
+def pps_mask_bits_call(
+    weights2d: jax.Array,   # (1, n_padded) f32
+    scale: jax.Array,       # (1,) f32 in SMEM
+    bits: jax.Array,        # (B_padded, n_padded) uint32
+    *,
+    tb: int = DEFAULT_TB,
+    tn: int = DEFAULT_TN,
+    interpret: bool = True,
+) -> jax.Array:
+    B, n = bits.shape
+    grid = (B // tb, n // tn)
+    in_specs, o_spec = _specs(tb, tn, fused=False)
+    return pl.pallas_call(
+        pps_mask_kernel_bits,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.int8),
+        interpret=interpret,
+    )(weights2d, scale, bits)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("batch", "tb", "tn", "interpret")
+)
+def pps_mask_fused_call(
+    weights2d: jax.Array,   # (1, n_padded) f32
+    scale: jax.Array,       # (1,) f32
+    seed: jax.Array,        # (1,) uint32
+    *,
+    batch: int,
+    tb: int = DEFAULT_TB,
+    tn: int = DEFAULT_TN,
+    interpret: bool = False,
+) -> jax.Array:
+    n = weights2d.shape[1]
+    grid = (batch // tb, n // tn)
+    in_specs, o_spec = _specs(tb, tn, fused=True)
+    kwargs = {}
+    if interpret:
+        kwargs["interpret"] = pltpu.InterpretParams()
+    return pl.pallas_call(
+        pps_mask_kernel_fused,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.int8),
+        **kwargs,
+    )(weights2d, scale, seed)

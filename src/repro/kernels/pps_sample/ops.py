@@ -1,0 +1,79 @@
+"""Jit'd public wrapper for the fused PPS sampling kernel.
+
+``pps_sample_mask`` pads (batch, n) to tile multiples, dispatches to the
+bit-input kernel (validation, CPU interpret) or the fused-PRNG kernel (TPU),
+and slices the padding back off.  Weights with zero total yield an empty
+mask.  The oracle lives in ``ref.py``; ``tests/test_kernels.py`` sweeps
+shapes x dtypes x c and asserts bit-exact agreement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import DEFAULT_TB, DEFAULT_TN, pps_mask_bits_call, pps_mask_fused_call
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("batch", "tb", "tn", "fused_rng", "interpret")
+)
+def pps_sample_mask(
+    key: jax.Array,
+    weights: jax.Array,
+    c: float = 1.0,
+    *,
+    batch: int,
+    tb: int = DEFAULT_TB,
+    tn: int = DEFAULT_TN,
+    fused_rng: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """(batch, n) int8 inclusion mask with P[mask=1] = min(c*w/W, 1).
+
+    fused_rng=False: bits generated with jax.random outside the kernel
+    (bit-exact vs ref; the validation configuration).
+    fused_rng=True: TPU-resident PRNG -- the production configuration whose
+    HBM traffic is mask-only.
+    """
+    n = weights.shape[0]
+    w = _pad_to(weights.astype(jnp.float32), tn, 0)[None, :]  # (1, n_pad)
+    total = jnp.sum(weights.astype(jnp.float32))
+    scale = jnp.where(total > 0, c / jnp.maximum(total, 1e-38), 0.0)
+    scale = jnp.asarray([scale], jnp.float32)
+    b_pad = (-batch) % tb + batch
+    if fused_rng:
+        seed = jax.random.key_data(key).reshape(-1)[:1].astype(jnp.uint32)
+        mask = pps_mask_fused_call(
+            w, scale, seed, batch=b_pad, tb=tb, tn=tn, interpret=interpret
+        )
+    else:
+        bits = jax.random.bits(key, (b_pad, w.shape[1]), jnp.uint32)
+        mask = pps_mask_bits_call(w, scale, bits, tb=tb, tn=tn, interpret=interpret)
+    return mask[:batch, :n]
+
+
+def pps_sample_mask_ref(key: jax.Array, weights: jax.Array, c: float = 1.0, *, batch: int,
+                        tb: int = DEFAULT_TB, tn: int = DEFAULT_TN) -> jax.Array:
+    """Oracle with the identical padding + bit stream as the kernel path."""
+    n = weights.shape[0]
+    w = _pad_to(weights.astype(jnp.float32), tn, 0)
+    total = jnp.sum(weights.astype(jnp.float32))
+    scale = jnp.where(total > 0, c / jnp.maximum(total, 1e-38), 0.0).astype(jnp.float32)
+    b_pad = (-batch) % tb + batch
+    bits = jax.random.bits(key, (b_pad, w.shape[0]), jnp.uint32)
+    mask = ref.pps_mask_ref(w, scale, bits)
+    return mask[:batch, :n]

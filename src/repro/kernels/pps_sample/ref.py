@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused PPS Bernoulli-mask kernel.
+
+Semantics shared with the kernel (bit-exact): element v of query b is
+included iff ``bits[b, v] < threshold(v)`` where
+
+    threshold(v) = u32(min(c * w_v / W, 1) * 2^32)
+
+computed in float32 exactly as the kernel computes it.  ``bits`` are the
+uniform uint32 random bits (supplied for validation; generated in-kernel by
+``pltpu.prng_random_bits`` on the TPU path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TWO32 = 4294967296.0  # 2**32
+
+
+def thresholds(weights: jax.Array, scale: jax.Array) -> jax.Array:
+    """u32 comparison thresholds; `scale` is c / W (f32 scalar)."""
+    p = jnp.minimum(weights.astype(jnp.float32) * scale, 1.0)
+    # f32 * 2^32 then to uint32 via uint64 to avoid overflow UB.
+    t = jnp.minimum(p * jnp.float32(TWO32), jnp.float32(TWO32 - 256.0))
+    return t.astype(jnp.uint32)
+
+
+def pps_mask_ref(weights: jax.Array, scale: jax.Array, bits: jax.Array) -> jax.Array:
+    """(B, n) int8 inclusion mask -- the oracle the kernel must match exactly."""
+    t = thresholds(weights, scale)
+    return (bits < t[None, :]).astype(jnp.int8)

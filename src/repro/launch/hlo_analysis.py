@@ -1,0 +1,162 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+The container is CPU-only, so nothing is *timed*: all three roofline terms
+are derived from the compiled module (target: TPU v5e):
+
+  compute  = HLO_FLOPs_per_chip / 197e12        (bf16 peak per chip)
+  memory   = HLO_bytes_per_chip / 819e9         (HBM bandwidth)
+  collective = collective_bytes_per_chip / 50e9 (ICI per-link)
+
+``cost_analysis`` supplies flops / bytes of the partitioned per-device
+module.  Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO text, sum result-shape sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, and apply ring-model
+multipliers per op kind (documented below) with the replica-group size k:
+
+  all-gather        bytes ~ S * (k-1)/k     (S = gathered result size)
+  all-reduce        bytes ~ 2 * S * (k-1)/k
+  reduce-scatter    bytes ~ S * (k-1)      (S = scattered result size)
+  all-to-all        bytes ~ S * (k-1)/k
+  collective-permute bytes ~ S
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12   # bf16 / chip (TPU v5e)
+HBM_BW = 819e9        # bytes/s / chip
+ICI_BW = 50e9         # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str, op: str) -> int:
+    """Sum of result-shape bytes on a collective def line (handles tuples)."""
+    head = line.split(f" {op}(")[0]
+    # take shapes after '=' only (result side)
+    if "=" in head:
+        head = head.split("=", 1)[1]
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        # iota form [num_groups, group_size] (dims may be transposed by
+        # <=[...] permutations; the product constraint disambiguates rarely,
+        # so take the 2nd entry which is the group size in practice)
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-op-kind byte totals (ring-model, per participating device)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for op in _COLLECTIVES:
+            token = f" {op}("
+            if token in ls and not ls.startswith("//"):
+                # skip -start/-done duplicates (count the -start only once)
+                if f"{op}-done" in ls:
+                    continue
+                s = _result_bytes(ls, op)
+                k = max(_group_size(ls), 1)
+                if op == "all-gather":
+                    moved = s * (k - 1) / max(k, 1)
+                elif op == "all-reduce":
+                    moved = 2 * s * (k - 1) / max(k, 1)
+                elif op == "reduce-scatter":
+                    moved = s * (k - 1)
+                elif op == "all-to-all":
+                    moved = s * (k - 1) / max(k, 1)
+                else:  # collective-permute
+                    moved = s
+                out[op] += moved
+                counts[op] += 1
+                break
+    total = sum(out.values())
+    return {"per_op_bytes": out, "counts": counts, "total_bytes": total}
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    collective_bytes_per_chip: float,
+) -> Dict[str, float]:
+    terms = {
+        "compute_s": flops_per_chip / PEAK_FLOPS,
+        "memory_s": bytes_per_chip / HBM_BW,
+        "collective_s": collective_bytes_per_chip / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_fraction_compute"] = (
+        terms["compute_s"] / bound if bound > 0 else 0.0
+    )
+    return terms
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """Spec-mandated analytic FLOPs: 6*N*D train, 2*N*D inference."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens
+
+
+def active_params(cfg, total_params: int) -> int:
+    """MoE-aware active parameter count (router always active, top_k/E of
+    expert FFN weights per token)."""
+    if not cfg.is_moe:
+        return total_params
+    expert_w = 3 * cfg.n_layers * cfg.n_experts * cfg.d_model * cfg.d_ff
+    inactive = expert_w * (1 - cfg.top_k / cfg.n_experts)
+    return int(total_params - inactive)
+
+
+def sharded_bytes(shape, dtype_bytes: int, spec, mesh) -> float:
+    """Per-device bytes of an array under a PartitionSpec."""
+    import numpy as np
+
+    factor = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            factor *= mesh.shape[a]
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * dtype_bytes / max(factor, 1)

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") -- the
+"pod" axis carries pure data parallelism (gradient all-reduce is the only
+collective crossing the pod boundary; FSDP parameter gathers stay inside a
+pod, matching the ICI/DCN bandwidth split).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} "
+            "(dry-run must set --xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"mesh {shape} needs {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever this host offers, as a 1-D data mesh (CPU tests/examples)."""
+    devices = jax.devices()
+    return Mesh(np.asarray(devices).reshape(len(devices), 1), ("data", "model"))

@@ -1,0 +1,323 @@
+"""Grouped-query attention with RoPE, qk-norm, sliding windows and KV caches.
+
+One implementation serves every attention-bearing arch:
+  * MHA (deepseek: kv == heads), GQA (qwen3/mixtral/...), MQA (gemma: kv=1)
+  * optional per-head RMS qk-norm (qwen3)
+  * sliding-window masking (mixtral, h2o-danube) -- and ring-buffer KV
+    caches sized to the window, which is what makes decode_32k/long_500k
+    memory-feasible for SWA archs
+  * decode: single-token query against the cache; prefill: bulk forward
+    that also fills the cache
+
+Memory discipline: bulk attention is *chunked* over query rows
+(cfg.attn_chunk, lax.scan) so the live score buffer is (B, H, C, T) rather
+than (B, H, T, T) -- the XLA analogue of flash attention's outer loop, and
+the difference between 137 GB and <1 GB of temp per device at 4k train /
+32k prefill.  Scores carry an explicit sharding constraint: kv-heads ->
+"model" when divisible, else query-groups, else query rows (always
+divisible by the 1024 chunk).  ``attn_impl='pallas'`` dispatches to the
+flash kernel (repro.kernels.flash_attention) on TPU runs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.context import axis_size, constrain
+from .common import KeyGen, apply_rope, dense_init, rms_norm, zeros_init
+
+NEG_INF = -1e30
+
+
+def init_attention(kg: KeyGen, cfg: ModelConfig, layers: int) -> Dict:
+    d, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": dense_init(kg, (layers, d, H * Dh), ("layers", "embed", "heads_x_dim"), fan_in=d),
+        "wk": dense_init(kg, (layers, d, K * Dh), ("layers", "embed", "kv_x_dim"), fan_in=d),
+        "wv": dense_init(kg, (layers, d, K * Dh), ("layers", "embed", "kv_x_dim"), fan_in=d),
+        "wo": dense_init(kg, (layers, H * Dh, d), ("layers", "heads_x_dim", "embed"), fan_in=H * Dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = zeros_init((layers, Dh), ("layers", None))
+        p["k_norm"] = zeros_init((layers, Dh), ("layers", None))
+    return p
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked cache in dot-friendly (L, B, Hkv, S, Dh) layout:
+    the decode einsum contracts directly against the cache with no layout
+    transpose, which would otherwise re-stream the entire multi-GB cache
+    every step (#Perf iteration C1).  For SWA archs ``S == window`` and
+    slots are written round-robin; absolute positions are reconstructed
+    from ``pos`` so no position ring is stored."""
+
+    k: jax.Array  # (L, B, Hkv, S, Dh)
+    v: jax.Array  # (L, B, Hkv, S, Dh)
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.swa_window > 0:
+        return min(cfg.swa_window, max_len)
+    return max_len
+
+
+def init_kv_cache(cfg: ModelConfig, layers: int, batch: int, max_len: int) -> KVCache:
+    S = cache_len(cfg, max_len)
+    shape = (layers, batch, cfg.n_kv_heads, S, cfg.hd)
+    dt = cfg.cdtype
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def _project_qkv(p: Dict, cfg: ModelConfig, x: jax.Array):
+    B, T, d = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.cdtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, T, H, Dh)
+    k = (x @ p["wk"].astype(dt)).reshape(B, T, K, Dh)
+    v = (x @ p["wv"].astype(dt)).reshape(B, T, K, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _attn_shard_mode(K: int, G: int, Tq: int) -> str:
+    """How to model-shard attention: kv-heads > query-groups > query rows.
+
+    Crucially the SAME dimension must be constrained on the q operand, the
+    score tensor and the output: a scores-only constraint makes GSPMD
+    reshard across mismatched dims, and for non-divisible head counts it
+    falls back to *involuntary full rematerialization* -- an all-gather of
+    the global (B, K, G, Tq, Tk) tensor (412 GB/layer for granite train_4k;
+    see EXPERIMENTS.md #Perf iteration A1)."""
+    ms = axis_size("model")
+    if ms <= 1:
+        return "none"
+    if K % ms == 0:
+        return "kv"
+    if G % ms == 0:
+        return "group"
+    if Tq % ms == 0:
+        return "rows"
+    return "none"
+
+
+_Q_ENTRIES = {  # (B, Tq, K, G, Dh)
+    "kv": ("__dp__", None, "model", None, None),
+    "group": ("__dp__", None, None, "model", None),
+    "rows": ("__dp__", "model", None, None, None),
+    "none": ("__dp__", None, None, None, None),
+}
+_S_ENTRIES = {  # (B, K, G, Tq, Tk)
+    "kv": ("__dp__", "model", None, None, None),
+    "group": ("__dp__", None, "model", None, None),
+    "rows": ("__dp__", None, None, "model", None),
+    "none": ("__dp__", None, None, None, None),
+}
+_KV_ENTRIES = {  # (B, Tk, K, Dh)
+    "kv": ("__dp__", None, "model", None),
+    "group": ("__dp__", None, None, None),
+    "rows": ("__dp__", None, None, None),
+    "none": ("__dp__", None, None, None),
+}
+
+
+def _sdpa(
+    q: jax.Array,  # (B, Tq, H, Dh)
+    k: jax.Array,  # (B, Tk, Hkv, Dh)
+    v: jax.Array,  # (B, Tk, Hkv, Dh)
+    mask: jax.Array,  # (B|1, Tq, Tk) bool
+    cfg: ModelConfig,
+) -> jax.Array:
+    B, Tq, H, Dh = q.shape
+    K = k.shape[2]
+    group = H // K
+    mode = _attn_shard_mode(K, group, Tq)
+    qg = q.reshape(B, Tq, K, group, Dh)
+    # Constraint scope (#Perf iterations A1/A1b/A1c): when head counts
+    # divide the model axis GSPMD already propagates a good sharding, and
+    # forcing operand constraints only adds reshards (dense archs regressed
+    # 0.69 -> 0.32 roofline fraction under the blanket version).  The full
+    # operand-consistent set is needed exactly in "rows" mode, where the
+    # scores-only constraint triggers involuntary full rematerialization
+    # (412 GB/layer gathers) for non-divisible head counts.
+    full_set = mode == "rows" and cfg.family in ("moe", "encdec")
+    if full_set:
+        qg = constrain(qg, *_Q_ENTRIES[mode])
+        k = constrain(k, *_KV_ENTRIES[mode])
+        v = constrain(v, *_KV_ENTRIES[mode])
+    # bf16 operands, f32 accumulation: avoids materializing f32 copies of
+    # the (potentially multi-GB) K/V tensors (see EXPERIMENTS.md #Perf).
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    s = s * (Dh**-0.5)
+    s = constrain(s, *_S_ENTRIES[mode])
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p_attn.astype(v.dtype), v,
+        preferred_element_type=jnp.float32)
+    o = o.reshape(B, Tq, H, Dh).astype(q.dtype)
+    if full_set:
+        # Return replicated-over-T: a seq-sharded residual stream leaks
+        # into the MoE dispatch (rank cumsum over sharded T) and costs far
+        # more in resharding than one gather of o (#Perf iteration A1b).
+        o = constrain(o, "__dp__", None, None, None)
+    return o
+
+
+def _mask_for(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int) -> jax.Array:
+    qi = q_pos[:, None]
+    kj = k_pos[None, :]
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window and window > 0:
+        mask &= (qi - kj) < window
+    return mask
+
+
+def _sdpa_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    positions: jax.Array, cfg: ModelConfig, causal: bool,
+) -> jax.Array:
+    """Query-chunked attention (flash-style outer loop as a lax.scan)."""
+    B, T, H, Dh = q.shape
+    C = cfg.attn_chunk
+    nC = T // C
+    qc = q.reshape(B, nC, C, H, Dh).swapaxes(0, 1)   # (nC, B, C, H, Dh)
+    pc = positions.reshape(nC, C)
+
+    def body(_, xs):
+        qi, pi = xs
+        mask = _mask_for(pi, positions, causal, cfg.swa_window)
+        return None, _sdpa(qi, k, v, mask[None], cfg)
+
+    _, oc = jax.lax.scan(body, None, (qc, pc))
+    return oc.swapaxes(0, 1).reshape(B, T, H, Dh)
+
+
+def _bulk_sdpa(q, k, v, positions, cfg: ModelConfig, causal: bool) -> jax.Array:
+    T = q.shape[1]
+    if cfg.attn_impl == "pallas" and causal:
+        from ..kernels.flash_attention.ops import flash_attention
+
+        qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+        o = flash_attention(
+            qt, kt, vt, causal=causal, window=cfg.swa_window,
+            interpret=jax.default_backend() != "tpu")
+        return jnp.swapaxes(o, 1, 2)
+    if cfg.attn_chunk > 0 and T > cfg.attn_chunk and T % cfg.attn_chunk == 0:
+        return _sdpa_chunked(q, k, v, positions, cfg, causal)
+    mask = _mask_for(positions, positions, causal, cfg.swa_window)
+    return _sdpa(q, k, v, mask[None], cfg)
+
+
+def attention_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, T, d)
+    positions: jax.Array,               # (T,) absolute positions
+    causal: bool = True,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    """Bulk (train / prefill / encoder) attention."""
+    B, T, _ = x.shape
+    dt = cfg.cdtype
+    q, k, v = _project_qkv(p, cfg, x)
+    if cross_kv is not None:
+        k, v = cross_kv
+        mask = jnp.ones((1, T, k.shape[1]), bool)
+        o = _sdpa(q, k, v, mask, cfg)
+        return o.reshape(B, T, -1) @ p["wo"].astype(dt)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, jnp.broadcast_to(positions, (B, T)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(positions, (B, T)), cfg.rope_theta)
+    o = _bulk_sdpa(q, k, v, positions, cfg, causal)
+    return o.reshape(B, T, -1) @ p["wo"].astype(dt)
+
+
+def attention_prefill(
+    p: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+    cache_k: jax.Array, cache_v: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Bulk forward that also returns the filled cache (last S slots)."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, jnp.broadcast_to(positions, (B, T)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(positions, (B, T)), cfg.rope_theta)
+    o = _bulk_sdpa(q, k, v, positions, cfg, causal=True)
+    dt = cfg.cdtype
+    out = o.reshape(B, T, -1) @ p["wo"].astype(dt)
+    kc = k.swapaxes(1, 2)  # -> (B, K, T, Dh) cache layout (one-time)
+    vc = v.swapaxes(1, 2)
+    S = cache_k.shape[2]
+    if cfg.swa_window > 0 and T > S:
+        # keep the last `window` keys, placed so slot = abs_pos % S
+        tail_k, tail_v = kc[:, :, -S:], vc[:, :, -S:]
+        start = (T - S) % S
+        cache_k = jnp.roll(tail_k, shift=start, axis=2).astype(cache_k.dtype)
+        cache_v = jnp.roll(tail_v, shift=start, axis=2).astype(cache_v.dtype)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, kc.astype(cache_k.dtype), 0, 2)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, vc.astype(cache_v.dtype), 0, 2)
+    return out, cache_k, cache_v
+
+
+def _sdpa_cached(
+    q: jax.Array,        # (B, 1, H, Dh)
+    ck: jax.Array,       # (B, K, S, Dh) -- cache layout, no transpose
+    cv: jax.Array,
+    mask: jax.Array,     # (B, 1, S)
+    cfg: ModelConfig,
+) -> jax.Array:
+    B, Tq, H, Dh = q.shape
+    K = ck.shape[1]
+    group = H // K
+    qg = q.reshape(B, Tq, K, group, Dh)
+    s = jnp.einsum("bqkgd,bksd->bkgqs", qg, ck, preferred_element_type=jnp.float32)
+    s = s * (Dh**-0.5)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bqkgd", p_attn.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Tq, H, Dh).astype(q.dtype)
+
+
+def attention_decode(
+    p: Dict, cfg: ModelConfig, x: jax.Array,  # (B, 1, d)
+    pos: jax.Array,                           # () int32 current position
+    cache_k: jax.Array, cache_v: jax.Array,   # (B, Hkv, S, Dh)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B = x.shape[0]
+    S = cache_k.shape[2]
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.rope_theta > 0:
+        posb = jnp.broadcast_to(pos[None], (B, 1))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    slot = pos % S if cfg.swa_window > 0 else jnp.minimum(pos, S - 1)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.swapaxes(1, 2).astype(cache_k.dtype), (0, 0, slot, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.swapaxes(1, 2).astype(cache_v.dtype), (0, 0, slot, 0))
+    # absolute position of each slot (ring reconstruction)
+    idx = jnp.arange(S)
+    if cfg.swa_window > 0:
+        abs_pos = pos - ((slot - idx) % S)
+    else:
+        abs_pos = idx
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if cfg.swa_window > 0:
+        valid &= (pos - abs_pos) < cfg.swa_window
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
+    o = _sdpa_cached(q, cache_k, cache_v, mask, cfg)
+    dt = cfg.cdtype
+    out = o.reshape(B, 1, -1) @ p["wo"].astype(dt)
+    return out, cache_k, cache_v

@@ -1,0 +1,185 @@
+"""Shared model machinery: tagged parameters, norms, RoPE, losses.
+
+Every parameter is created as a ``Param(value, axes)`` leaf where ``axes``
+names each dimension with a *logical* axis ("layers", "embed", "ffn",
+"heads", "kv_heads", "head_dim", "vocab", "experts", ...).  The sharding
+layer (repro.sharding) maps logical axes onto mesh axes; models never
+mention mesh axes directly.  ``split_params`` separates values from axes so
+the value tree is a plain pytree for jit/opt/checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """Array + logical-axis names.  Registered as a pytree node whose *aux
+    data* carries the axes, so tagged trees pass through jit / grad /
+    optimizers / eval_shape unchanged while the sharding layer can read the
+    axes back from any derived tree (grads, moments, ...)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value: jax.Array, axes: Tuple[Optional[str], ...]) -> None:
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self) -> str:
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def unwrap(tree: Any) -> Any:
+    """Strip Param wrappers -> plain array tree (same values, no copies)."""
+    return jax.tree.map(lambda p: p.value if is_param(p) else p, tree, is_leaf=is_param)
+
+
+def axes_of(tree: Any) -> Any:
+    """Tree of logical-axes tuples at each Param position (None elsewhere)."""
+    return jax.tree.map(
+        lambda p: p.axes if is_param(p) else None, tree, is_leaf=is_param
+    )
+
+
+def split_params(tree: Any) -> Tuple[Any, Any]:
+    """(values, axes) with identical tree structure."""
+    return unwrap(tree), axes_of(tree)
+
+
+class KeyGen:
+    """Deterministic fold-in key stream for parameter init."""
+
+    def __init__(self, key: jax.Array) -> None:
+        self._key = key
+        self._i = 0
+
+    def __call__(self) -> jax.Array:
+        self._i += 1
+        return jax.random.fold_in(self._key, self._i)
+
+
+def dense_init(
+    kg: KeyGen,
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    *,
+    fan_in: Optional[int] = None,
+    scale: float = 1.0,
+    dtype: jnp.dtype = jnp.float32,
+) -> Param:
+    """Truncated-normal fan-in init (std = scale / sqrt(fan_in))."""
+    if fan_in is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(max(fan_in, 1))
+    value = std * jax.random.truncated_normal(kg(), -2.0, 2.0, shape, dtype)
+    return Param(value, axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# -- norms (always f32 math) ---------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(
+        jnp.float32
+    )
+    return out.astype(dt)
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)  # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., T, 1, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(T: int, d: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + T, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((T, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# -- losses ---------------------------------------------------------------------
+
+def cross_entropy_loss(
+    logits: jax.Array,  # (B, T, V) -- may include padded vocab tail
+    labels: jax.Array,  # (B, T) int32
+    mask: Optional[jax.Array] = None,  # (B, T) 1 = count
+    vocab_size: Optional[int] = None,
+    z_loss: float = 1e-4,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Stable softmax xent in f32 with optional z-loss; ignores vocab padding."""
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < V:
+        pad_mask = jnp.arange(V) >= vocab_size
+        lf = jnp.where(pad_mask[None, None, :], -1e30, lf)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    metrics = {
+        "loss": loss,
+        "ppl_tokens": denom,
+        "accuracy": ((jnp.argmax(lf, -1) == labels) * mask).sum() / denom,
+    }
+    return loss, metrics
+
+
+def cast_fp(x: jax.Array, dtype) -> jax.Array:
+    return x.astype(dtype) if x.dtype != dtype else x

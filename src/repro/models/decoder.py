@@ -1,0 +1,365 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+Layers are *scanned* (params stacked on a leading "layers" axis) so the HLO
+is depth-independent -- essential for compiling 56-layer models against a
+512-way mesh in the dry-run -- with optional per-block remat.
+
+Three entry points, one per workload kind:
+  * ``forward``       -- bulk causal forward (train / the prefill shapes)
+  * ``prefill``       -- bulk forward that also fills the decode state
+  * ``decode_step``   -- one token against the cached state
+
+Family specifics:
+  dense / vlm : attn + MLP            (vlm: stub patch embeddings prepended)
+  moe         : attn + top-k MoE
+  ssm (xlstm) : (P-1) mLSTM + 1 sLSTM per super-block, no FFN (d_ff = 0)
+  hybrid      : parallel attn + mamba heads (Hymba), then MLP
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.context import constrain
+from .common import (
+    KeyGen,
+    Param,
+    dense_init,
+    rms_norm,
+    zeros_init,
+)
+from .attention import (
+    KVCache,
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    init_attention,
+    init_kv_cache,
+)
+from .mlp import init_mlp, init_moe, mlp_forward, moe_forward
+from .ssm import (
+    MambaState,
+    MLSTMState,
+    SLSTMState,
+    init_mamba,
+    init_mlstm,
+    init_slstm,
+    mamba_forward,
+    mamba_init_state,
+    mlstm_forward,
+    mlstm_init_state,
+    slstm_forward,
+    slstm_init_state,
+)
+
+
+class DecodeState(NamedTuple):
+    pos: jax.Array                      # () int32 -- next position to write
+    kv: Optional[KVCache] = None        # attention families
+    mlstm: Optional[MLSTMState] = None  # stacked (n_super, P-1, ...) for ssm
+    slstm: Optional[SLSTMState] = None  # stacked (n_super, ...)
+    mamba: Optional[MambaState] = None  # stacked (L, ...) for hybrid
+    aux: Optional[jax.Array] = None
+
+
+# ------------------------------ init -----------------------------------------
+
+def init_decoder(key: jax.Array, cfg: ModelConfig) -> Dict:
+    kg = KeyGen(key)
+    d, L, Vp = cfg.d_model, cfg.n_layers, cfg.vocab_padded
+    params: Dict[str, Any] = {
+        "embed": dense_init(kg, (Vp, d), ("vocab", "embed"), fan_in=1, scale=0.02),
+        "final_norm": zeros_init((d,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kg, (d, Vp), ("embed", "vocab"), fan_in=d)
+
+    if cfg.family == "ssm":
+        P = max(cfg.slstm_every, 2)
+        n_super, rem = divmod(L, P)
+        assert rem == 0, f"n_layers={L} must be a multiple of slstm_every={P}"
+        sub_m = cfg.replace(n_heads=cfg.n_heads)  # same head layout
+        blocks = {
+            "mlstm": init_mlstm(kg, sub_m, n_super * (P - 1)),
+            "mlstm_ln": zeros_init((n_super * (P - 1), d), ("layers", "embed")),
+            "slstm": init_slstm(kg, sub_m, n_super),
+            "slstm_ln": zeros_init((n_super, d), ("layers", "embed")),
+        }
+        # reshape mlstm stacks to (n_super, P-1, ...)
+        def regroup(p):
+            return Param(
+                p.value.reshape((n_super, P - 1) + p.value.shape[1:]),
+                ("layers_outer",) + p.axes,
+            )
+        blocks["mlstm"] = jax.tree.map(regroup, blocks["mlstm"], is_leaf=lambda x: isinstance(x, Param))
+        blocks["mlstm_ln"] = regroup(blocks["mlstm_ln"])
+        params["blocks"] = blocks
+        return params
+
+    blocks = {
+        "ln1": zeros_init((L, d), ("layers", "embed")),
+        "attn": init_attention(kg, cfg, L),
+        "ln2": zeros_init((L, d), ("layers", "embed")),
+    }
+    if cfg.family == "hybrid":
+        blocks["mamba"] = init_mamba(kg, cfg, L)
+        blocks["attn_ln"] = zeros_init((L, d), ("layers", "embed"))
+        blocks["mamba_ln"] = zeros_init((L, d), ("layers", "embed"))
+    if cfg.is_moe:
+        blocks["moe"] = init_moe(kg, cfg, L)
+    elif cfg.mlp_kind != "none":
+        blocks["mlp"] = init_mlp(kg, cfg, L)
+    params["blocks"] = blocks
+    return params
+
+
+# ------------------------------ blocks ----------------------------------------
+
+def _attn_block(bp: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                aux: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, bp["ln1"])
+    if cfg.family == "hybrid":
+        a = attention_forward(bp["attn"], cfg, h, positions)
+        m, _ = mamba_forward(bp["mamba"], cfg, h, mamba_init_state(cfg, x.shape[0]))
+        mixed = 0.5 * (rms_norm(a, bp["attn_ln"]) + rms_norm(m, bp["mamba_ln"]))
+        x = x + mixed
+    else:
+        x = x + attention_forward(bp["attn"], cfg, h, positions)
+    h2 = rms_norm(x, bp["ln2"])
+    if cfg.is_moe:
+        out, a_loss = moe_forward(bp["moe"], cfg, h2)
+        x = x + out
+        aux = aux + a_loss
+    elif cfg.mlp_kind != "none":
+        x = x + mlp_forward(bp["mlp"], cfg, h2)
+    return x, aux
+
+
+def _ssm_superblock(bp: Dict, cfg: ModelConfig, x: jax.Array,
+                    m_states: MLSTMState, s_state: SLSTMState
+                    ) -> Tuple[jax.Array, MLSTMState, SLSTMState]:
+    """(P-1) mLSTM layers (inner scan) then one sLSTM layer."""
+
+    def m_layer(carry, xs):
+        xc = carry
+        lp, st = xs
+        h = rms_norm(xc, lp["__ln__"])
+        out, st_new = mlstm_forward({k: v for k, v in lp.items() if k != "__ln__"},
+                                    cfg, h, st)
+        return xc + out, st_new
+
+    ml = dict(bp["mlstm"])
+    ml["__ln__"] = bp["mlstm_ln"]
+    x, new_m = jax.lax.scan(m_layer, x, (ml, m_states))
+    h = rms_norm(x, bp["slstm_ln"])
+    out, new_s = slstm_forward(bp["slstm"], cfg, h, s_state)
+    return x + out, new_m, new_s
+
+
+# ------------------------------ bulk forward -----------------------------------
+
+def _embed(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+           extra_embeds: Optional[jax.Array]) -> jax.Array:
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype)
+    if extra_embeds is not None:  # vlm stub frontend: prepend patch embeds
+        x = jnp.concatenate([extra_embeds.astype(cfg.cdtype), x], axis=1)
+    return constrain(x, "__dp__", None, None)
+
+
+def _unembed(params: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    else:
+        logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return constrain(logits, "__dp__", None, "model")
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                        # (B, T_text)
+    extra_embeds: Optional[jax.Array] = None,  # (B, n_patches, d) for vlm
+) -> Tuple[jax.Array, jax.Array]:
+    """Bulk causal forward.  Returns (logits (B, T, V_pad), aux_loss)."""
+    x = _embed(params, cfg, tokens, extra_embeds)
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        P = max(cfg.slstm_every, 2)
+        n_super = cfg.n_layers // P
+
+        def super_block(carry, bp):
+            xc = carry
+            m0 = _stack_states(mlstm_init_state(cfg, B), P - 1)
+            s0 = slstm_init_state(cfg, B)
+            out, _, _ = _ssm_superblock(bp, cfg, xc, m0, s0)
+            return out, None
+
+        body = super_block
+        if cfg.remat == "block":
+            body = jax.checkpoint(super_block, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+        return _unembed(params, cfg, x), aux0
+
+    def block(carry, bp):
+        xc, aux = carry
+        xc, aux = _attn_block(bp, cfg, xc, positions, aux)
+        return (xc, aux), None
+
+    body = block
+    if cfg.remat == "block":
+        body = jax.checkpoint(block, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"], unroll=cfg.scan_unroll)
+    return _unembed(params, cfg, x), aux
+
+
+def _stack_states(state, n: int):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), state)
+
+
+# ------------------------------ decode ------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> DecodeState:
+    pos = jnp.zeros((), jnp.int32)
+    if cfg.family == "ssm":
+        P = max(cfg.slstm_every, 2)
+        n_super = cfg.n_layers // P
+        m = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_super, P - 1) + a.shape),
+            mlstm_init_state(cfg, batch),
+        )
+        s = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_super,) + a.shape),
+            slstm_init_state(cfg, batch),
+        )
+        return DecodeState(pos=pos, mlstm=m, slstm=s)
+    kv = init_kv_cache(cfg, cfg.n_layers, batch, max_len)
+    if cfg.family == "hybrid":
+        mam = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+            mamba_init_state(cfg, batch),
+        )
+        return DecodeState(pos=pos, kv=kv, mamba=mam)
+    return DecodeState(pos=pos, kv=kv)
+
+
+def prefill(
+    params: Dict, cfg: ModelConfig, tokens: jax.Array, state: DecodeState,
+    extra_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, DecodeState]:
+    """Bulk forward filling the decode state; returns last-position logits."""
+    x = _embed(params, cfg, tokens, extra_embeds)
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+
+    if cfg.family == "ssm":
+        def super_block(carry, xs):
+            xc = carry
+            bp, m_st, s_st = xs
+            out, m_new, s_new = _ssm_superblock(bp, cfg, xc, m_st, s_st)
+            return out, (m_new, s_new)
+
+        x, (m_all, s_all) = jax.lax.scan(
+            super_block, x, (params["blocks"], state.mlstm, state.slstm),
+            unroll=cfg.scan_unroll)
+        logits = _unembed(params, cfg, x[:, -1:])
+        return logits, state._replace(pos=jnp.asarray(T, jnp.int32), mlstm=m_all, slstm=s_all)
+
+    def block(carry, xs):
+        xc = carry
+        bp, ck, cv, mam = xs
+        h = rms_norm(xc, bp["ln1"])
+        if cfg.family == "hybrid":
+            a, ck, cv = attention_prefill(bp["attn"], cfg, h, positions, ck, cv)
+            m_out, mam = mamba_forward(bp["mamba"], cfg, h, mam)
+            xc = xc + 0.5 * (rms_norm(a, bp["attn_ln"]) + rms_norm(m_out, bp["mamba_ln"]))
+        else:
+            a, ck, cv = attention_prefill(bp["attn"], cfg, h, positions, ck, cv)
+            xc = xc + a
+        h2 = rms_norm(xc, bp["ln2"])
+        if cfg.is_moe:
+            out, _ = moe_forward(bp["moe"], cfg, h2)
+            xc = xc + out
+        elif cfg.mlp_kind != "none":
+            xc = xc + mlp_forward(bp["mlp"], cfg, h2)
+        return xc, (ck, cv, mam)
+
+    mam_in = state.mamba if state.mamba is not None else _dummy_mamba(cfg, B)
+    x, (ck_all, cv_all, mam_all) = jax.lax.scan(
+        block, x, (params["blocks"], state.kv.k, state.kv.v, mam_in),
+        unroll=cfg.scan_unroll)
+    logits = _unembed(params, cfg, x[:, -1:])
+    new_state = state._replace(
+        pos=jnp.asarray(T, jnp.int32), kv=KVCache(ck_all, cv_all),
+        mamba=mam_all if state.mamba is not None else None,
+    )
+    return logits, new_state
+
+
+def _dummy_mamba(cfg: ModelConfig, batch: int):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        MambaState(jnp.zeros((batch, 1, 1), jnp.float32)),
+    )
+
+
+def decode_step(
+    params: Dict, cfg: ModelConfig, token: jax.Array, state: DecodeState,
+) -> Tuple[jax.Array, DecodeState]:
+    """One decode step.  token: (B, 1) int32 -> logits (B, 1, V_pad)."""
+    x = params["embed"][token].astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype)
+    B = x.shape[0]
+    pos = state.pos
+
+    if cfg.family == "ssm":
+        def super_block(carry, xs):
+            xc = carry
+            bp, m_st, s_st = xs
+            out, m_new, s_new = _ssm_superblock(bp, cfg, xc, m_st, s_st)
+            return out, (m_new, s_new)
+
+        x, (m_all, s_all) = jax.lax.scan(
+            super_block, x, (params["blocks"], state.mlstm, state.slstm),
+            unroll=cfg.scan_unroll)
+        return _unembed(params, cfg, x), state._replace(
+            pos=pos + 1, mlstm=m_all, slstm=s_all)
+
+    def block(carry, xs):
+        xc = carry
+        bp, ck, cv, mam = xs
+        h = rms_norm(xc, bp["ln1"])
+        a, ck, cv = attention_decode(bp["attn"], cfg, h, pos, ck, cv)
+        if cfg.family == "hybrid":
+            m_out, mam = mamba_forward(bp["mamba"], cfg, h, mam)
+            xc = xc + 0.5 * (rms_norm(a, bp["attn_ln"]) + rms_norm(m_out, bp["mamba_ln"]))
+        else:
+            xc = xc + a
+        h2 = rms_norm(xc, bp["ln2"])
+        if cfg.is_moe:
+            out, _ = moe_forward(bp["moe"], cfg, h2)
+            xc = xc + out
+        elif cfg.mlp_kind != "none":
+            xc = xc + mlp_forward(bp["mlp"], cfg, h2)
+        return xc, (ck, cv, mam)
+
+    mam_in = state.mamba if state.mamba is not None else _dummy_mamba(cfg, B)
+    x, (ck_all, cv_all, mam_all) = jax.lax.scan(
+        block, x, (params["blocks"], state.kv.k, state.kv.v, mam_in),
+        unroll=cfg.scan_unroll)
+    new_state = state._replace(
+        pos=pos + 1, kv=KVCache(ck_all, cv_all),
+        mamba=mam_all if state.mamba is not None else None,
+    )
+    return _unembed(params, cfg, x), new_state

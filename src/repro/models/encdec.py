@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, enc_seq, d_model), which pass through a
+linear adapter and the bidirectional encoder stack.  The decoder is a
+causal transformer with per-layer cross-attention; positions are sinusoidal
+(whisper uses absolute embeddings, not RoPE).
+
+Decode state carries (self-KV ring, cross-KV computed once at prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import KeyGen, dense_init, rms_norm, sinusoidal_positions, zeros_init
+from .attention import (
+    KVCache,
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    init_attention,
+    init_kv_cache,
+)
+from .mlp import init_mlp, mlp_forward
+
+
+class EncDecState(NamedTuple):
+    pos: jax.Array
+    self_kv: KVCache
+    cross_k: jax.Array  # (L, B, S_enc, H, Dh)
+    cross_v: jax.Array
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> Dict:
+    kg = KeyGen(key)
+    d, Vp = cfg.d_model, cfg.vocab_padded
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    params: Dict[str, Any] = {
+        "adapter": dense_init(kg, (d, d), ("embed", "embed_out"), fan_in=d),
+        "embed": dense_init(kg, (Vp, d), ("vocab", "embed"), fan_in=1, scale=0.02),
+        "enc": {
+            "ln1": zeros_init((Le, d), ("layers", "embed")),
+            "attn": init_attention(kg, cfg, Le),
+            "ln2": zeros_init((Le, d), ("layers", "embed")),
+            "mlp": init_mlp(kg, cfg, Le),
+        },
+        "enc_norm": zeros_init((d,), ("embed",)),
+        "dec": {
+            "ln1": zeros_init((Ld, d), ("layers", "embed")),
+            "self_attn": init_attention(kg, cfg, Ld),
+            "ln2": zeros_init((Ld, d), ("layers", "embed")),
+            "cross_q": dense_init(kg, (Ld, d, cfg.n_heads * cfg.hd),
+                                  ("layers", "embed", "heads_x_dim"), fan_in=d),
+            "cross_k": dense_init(kg, (Ld, d, cfg.n_heads * cfg.hd),
+                                  ("layers", "embed", "heads_x_dim"), fan_in=d),
+            "cross_v": dense_init(kg, (Ld, d, cfg.n_heads * cfg.hd),
+                                  ("layers", "embed", "heads_x_dim"), fan_in=d),
+            "cross_o": dense_init(kg, (Ld, cfg.n_heads * cfg.hd, d),
+                                  ("layers", "heads_x_dim", "embed"), fan_in=cfg.n_heads * cfg.hd),
+            "ln3": zeros_init((Ld, d), ("layers", "embed")),
+            "mlp": init_mlp(kg, cfg, Ld),
+        },
+        "final_norm": zeros_init((d,), ("embed",)),
+    }
+    return params
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder output (B, S_enc, d)."""
+    dt = cfg.cdtype
+    x = frames.astype(dt) @ params["adapter"].astype(dt)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)[None]
+    positions = jnp.arange(x.shape[1])
+
+    def block(carry, bp):
+        xc = carry
+        h = rms_norm(xc, bp["ln1"])
+        xc = xc + attention_forward(bp["attn"], cfg, h, positions, causal=False)
+        h2 = rms_norm(xc, bp["ln2"])
+        xc = xc + mlp_forward(bp["mlp"], cfg, h2)
+        return xc, None
+
+    body = jax.checkpoint(block, prevent_cse=False) if cfg.remat == "block" else block
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=cfg.scan_unroll)
+    return rms_norm(x, params["enc_norm"])
+
+
+def _cross_attn(bp: Dict, cfg: ModelConfig, x: jax.Array,
+                ck: jax.Array, cv: jax.Array) -> jax.Array:
+    """q from x against precomputed per-layer cross K/V (B, S_enc, H, Dh)."""
+    B, T, _ = x.shape
+    H, Dh = cfg.n_heads, cfg.hd
+    dt = cfg.cdtype
+    q = (x @ bp["cross_q"].astype(dt)).reshape(B, T, H, Dh)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, ck, preferred_element_type=jnp.float32)
+    s = s * (Dh**-0.5)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", p_attn.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32).astype(dt)
+    return o.reshape(B, T, H * Dh) @ bp["cross_o"].astype(dt)
+
+
+def _project_cross_kv(params: Dict, cfg: ModelConfig, enc_out: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """All-layer cross K/V from encoder output: (L, B, S, H, Dh) each."""
+    dt = cfg.cdtype
+    H, Dh = cfg.n_heads, cfg.hd
+    B, S, d = enc_out.shape
+    ck = jnp.einsum("bsd,lde->lbse", enc_out.astype(dt), params["dec"]["cross_k"].astype(dt))
+    cv = jnp.einsum("bsd,lde->lbse", enc_out.astype(dt), params["dec"]["cross_v"].astype(dt))
+    L = ck.shape[0]
+    return ck.reshape(L, B, S, H, Dh), cv.reshape(L, B, S, H, Dh)
+
+
+def _dec_embed(params: Dict, cfg: ModelConfig, tokens: jax.Array, offset: int | jax.Array = 0):
+    dt = cfg.cdtype
+    x = params["embed"][tokens].astype(dt)
+    T = tokens.shape[1]
+    if isinstance(offset, int) and offset == 0:
+        pe = sinusoidal_positions(T, cfg.d_model).astype(dt)[None]
+    else:
+        # decode: single position
+        pos = jnp.arange(T)[None, :] + offset
+        pe = _sinusoid_at(pos, cfg.d_model).astype(dt)
+    return x + pe
+
+
+def _sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    import math as _m
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-_m.log(10000.0) / d))
+    ang = pos[..., None].astype(jnp.float32) * div  # (..., d/2)
+    pe = jnp.stack([jnp.sin(ang), jnp.cos(ang)], axis=-1).reshape(pos.shape + (d,))
+    return pe
+
+
+def forward(params: Dict, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced training forward.  Returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, frames)
+    ck_all, cv_all = _project_cross_kv(params, cfg, enc_out)
+    x = _dec_embed(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    def block(carry, xs):
+        xc = carry
+        bp, ck, cv = xs
+        h = rms_norm(xc, bp["ln1"])
+        xc = xc + attention_forward(bp["self_attn"], cfg, h, positions, causal=True)
+        h2 = rms_norm(xc, bp["ln2"])
+        xc = xc + _cross_attn(bp, cfg, h2, ck, cv)
+        h3 = rms_norm(xc, bp["ln3"])
+        xc = xc + mlp_forward(bp["mlp"], cfg, h3)
+        return xc, None
+
+    body = jax.checkpoint(block, prevent_cse=False) if cfg.remat == "block" else block
+    x, _ = jax.lax.scan(body, x, (params["dec"], ck_all, cv_all),
+                        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int) -> EncDecState:
+    kv = init_kv_cache(cfg, cfg.n_layers, batch, max_len)
+    H, Dh = cfg.n_heads, cfg.hd
+    dt = cfg.cdtype
+    shape = (cfg.n_layers, batch, cfg.enc_seq, H, Dh)
+    return EncDecState(
+        pos=jnp.zeros((), jnp.int32),
+        self_kv=kv,
+        cross_k=jnp.zeros(shape, dt),
+        cross_v=jnp.zeros(shape, dt),
+    )
+
+
+def prefill(params: Dict, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array,
+            state: EncDecState) -> Tuple[jax.Array, EncDecState]:
+    enc_out = encode(params, cfg, frames)
+    ck_all, cv_all = _project_cross_kv(params, cfg, enc_out)
+    x = _dec_embed(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    def block(carry, xs):
+        xc = carry
+        bp, ck, cv, sk, sv = xs
+        h = rms_norm(xc, bp["ln1"])
+        a, sk, sv = attention_prefill(bp["self_attn"], cfg, h, positions, sk, sv)
+        xc = xc + a
+        h2 = rms_norm(xc, bp["ln2"])
+        xc = xc + _cross_attn(bp, cfg, h2, ck, cv)
+        h3 = rms_norm(xc, bp["ln3"])
+        xc = xc + mlp_forward(bp["mlp"], cfg, h3)
+        return xc, (sk, sv)
+
+    x, (sk_all, sv_all) = jax.lax.scan(
+        block, x, (params["dec"], ck_all, cv_all, state.self_kv.k, state.self_kv.v),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x[:, -1:], params["final_norm"])
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    T = tokens.shape[1]
+    return logits, state._replace(
+        pos=jnp.asarray(T, jnp.int32),
+        self_kv=KVCache(sk_all, sv_all), cross_k=ck_all, cross_v=cv_all)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array, state: EncDecState
+                ) -> Tuple[jax.Array, EncDecState]:
+    x = _dec_embed(params, cfg, token, offset=state.pos)
+    pos = state.pos
+
+    def block(carry, xs):
+        xc = carry
+        bp, ck, cv, sk, sv = xs
+        h = rms_norm(xc, bp["ln1"])
+        a, sk, sv = attention_decode(bp["self_attn"], cfg, h, pos, sk, sv)
+        xc = xc + a
+        h2 = rms_norm(xc, bp["ln2"])
+        xc = xc + _cross_attn(bp, cfg, h2, ck, cv)
+        h3 = rms_norm(xc, bp["ln3"])
+        xc = xc + mlp_forward(bp["mlp"], cfg, h3)
+        return xc, (sk, sv)
+
+    x, (sk_all, sv_all) = jax.lax.scan(
+        block, x, (params["dec"], state.cross_k, state.cross_v,
+                   state.self_kv.k, state.self_kv.v),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"])
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, state._replace(pos=pos + 1, self_kv=KVCache(sk_all, sv_all))

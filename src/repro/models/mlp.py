@@ -1,0 +1,140 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU MLPs and token-choice MoE.
+
+The MoE uses capacity-bounded gather dispatch (argsort by expert, take the
+first C tokens per expert) rather than one-hot einsum dispatch, so the
+compiled FLOPs reflect *active* expert compute (top_k/E of dense) -- this is
+what makes the mixtral / granite roofline numbers meaningful.  Dispatch is
+vmapped over the batch row so the sort never crosses the data-parallel
+sharding boundary (no global collectives from routing; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.context import constrain
+from .common import KeyGen, dense_init
+
+
+def init_mlp(kg: KeyGen, cfg: ModelConfig, layers: int) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(kg, (layers, d, f), ("layers", "embed", "ffn"), fan_in=d),
+            "w_up": dense_init(kg, (layers, d, f), ("layers", "embed", "ffn"), fan_in=d),
+            "w_down": dense_init(kg, (layers, f, d), ("layers", "ffn", "embed"), fan_in=f),
+        }
+    if cfg.mlp_kind == "gelu":
+        return {
+            "w_in": dense_init(kg, (layers, d, f), ("layers", "embed", "ffn"), fan_in=d),
+            "w_out": dense_init(kg, (layers, f, d), ("layers", "ffn", "embed"), fan_in=f),
+        }
+    raise ValueError(cfg.mlp_kind)
+
+
+def mlp_forward(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = cfg.cdtype
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        g = act(x @ p["w_gate"].astype(dt))
+        u = x @ p["w_up"].astype(dt)
+        return (g * u) @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_in"].astype(dt))
+    return h @ p["w_out"].astype(dt)
+
+
+# -- mixture of experts ---------------------------------------------------------
+
+def init_moe(kg: KeyGen, cfg: ModelConfig, layers: int) -> Dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": dense_init(kg, (layers, d, E), ("layers", "embed", "experts"), fan_in=d),
+        "w_gate": dense_init(kg, (layers, E, d, f), ("layers", "experts", "embed", "expert_ffn"), fan_in=d),
+        "w_up": dense_init(kg, (layers, E, d, f), ("layers", "experts", "embed", "expert_ffn"), fan_in=d),
+        "w_down": dense_init(kg, (layers, E, f, d), ("layers", "experts", "expert_ffn", "embed"), fan_in=f),
+    }
+
+
+def _dispatch_one_row(
+    x: jax.Array,        # (T, d)
+    gates: jax.Array,    # (T, E) combine weights (0 for unrouted)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Capacity-bounded gather dispatch for one batch row.
+
+    Returns (gathered (E, C, d), token_idx (E, C), combine_w (E, C)).
+    Tokens beyond capacity C are dropped (standard token-choice semantics).
+    """
+    T, E = gates.shape
+    C = max(1, int(cfg.top_k * T * cfg.capacity_factor / cfg.n_experts))
+    C = min(C, T)
+    routed = gates > 0.0  # (T, E)
+    # rank of each token within its expert's queue (arrival order)
+    ranks = jnp.cumsum(routed.astype(jnp.int32), axis=0) - 1  # (T, E)
+    keep = routed & (ranks < C)
+    t_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, E)).reshape(-1)
+    e_sc = jnp.where(keep, jnp.arange(E)[None, :], E).reshape(-1)   # E => dropped
+    r_sc = jnp.where(keep, ranks, C).reshape(-1)                    # C => dropped
+    slot_owner = jnp.full((E, C), T, jnp.int32).at[e_sc, r_sc].set(t_idx, mode="drop")
+    combine_w = (
+        jnp.zeros((E, C), gates.dtype).at[e_sc, r_sc].set(gates.reshape(-1), mode="drop")
+    )
+    x_pad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+    gathered = x_pad[slot_owner]  # (E, C, d)
+    return gathered, slot_owner, combine_w
+
+
+def moe_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array  # (B, T, d)
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE; returns (out, aux_load_balance_loss)."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = cfg.cdtype
+    # Dispatch ranks are a cumsum over T: keep T unsharded here (batch rows
+    # already carry the data parallelism), see #Perf iteration A1b.
+    x = constrain(x, "__dp__", None, None)
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)  # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (B, T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    gates = jax.vmap(
+        lambda i, w: jnp.zeros((T, E), probs.dtype).at[jnp.arange(T)[:, None], i].set(w)
+    )(top_i, top_w)
+
+    from ..sharding.context import axis_size
+
+    # Small per-expert FFNs (granite: 512) keep weights replicated (see
+    # sharding rule); shard the *capacity* dim over "model" instead so the
+    # expert compute still splits 16 ways and the only collective is one
+    # late (B, T, d) psum per layer (#Perf iteration A2b).
+    ms = axis_size("model")
+    cap_sharded = ms > 1 and cfg.d_ff // ms < 128
+
+    def one_row(xr, gr):
+        gathered, owner, comb = _dispatch_one_row(xr, gr.astype(dt), cfg)
+        if cap_sharded and gathered.shape[1] % ms == 0:
+            gathered = constrain(gathered, None, "model", None)
+        h = jax.nn.silu(
+            jnp.einsum("ecd,edf->ecf", gathered, p["w_gate"].astype(dt))
+        ) * jnp.einsum("ecd,edf->ecf", gathered, p["w_up"].astype(dt))
+        y = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))  # (E, C, d)
+        y = y * comb[..., None].astype(dt)
+        out = jnp.zeros((T + 1, d), dt)
+        out = out.at[owner.reshape(-1)].add(y.reshape(-1, d), mode="drop")
+        return out[:T]
+
+    out = jax.vmap(one_row)(x, gates)
+    # Late reduction: constrain the *combined* (B, T, d) output rather than
+    # the (B, E, C, d) capacity tensor, so GSPMD psums after the scatter-add
+    # (T vs E*C ~ top_k*capacity_factor x fewer bytes; #Perf iteration B1).
+    out = constrain(out, "__dp__", None, None)
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=(0, 1))                    # (E,)
+    ce = gates.astype(jnp.float32).mean(axis=(0, 1)) * E / max(k, 1)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,165 @@
+"""Model bundle: one uniform interface over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+(usable under jit/pjit/eval_shape):
+
+  init(key)                          -> tagged params (Param leaves)
+  loss(params, batch)                -> (loss, metrics)        [train shapes]
+  forward(params, batch)             -> logits                 [prefill shapes]
+  init_state(batch, max_len)         -> decode state
+  prefill(params, batch, state)      -> (logits, state)
+  decode(params, token, state)       -> (logits, state)
+  input_specs(shape)                 -> ShapeDtypeStruct pytree for dry-runs
+
+Batch layout (ShapeDtypeStruct stand-ins come from ``input_specs``):
+  dense/moe/ssm/hybrid: tokens (B,T) i32, labels (B,T) i32
+  vlm:   + patch_embeds (B, n_patches, d) bf16; tokens/labels (B, T-n_patches)
+  audio: frames (B, enc_seq, d) bf16; tokens/labels (B, T)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .common import cross_entropy_loss, split_params, unwrap
+from . import decoder as dec
+from . import encdec
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    init_state: Callable
+    prefill: Callable
+    decode: Callable
+    input_specs: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)
+
+
+# ------------------------------ decoder families ------------------------------
+
+def _build_decoder(cfg: ModelConfig) -> Model:
+    is_vlm = cfg.family == "vlm" and cfg.n_patches > 0
+
+    def init(key):
+        return dec.init_decoder(key, cfg)
+
+    def loss(params, batch):
+        params = unwrap(params)
+        extra = batch.get("patch_embeds") if is_vlm else None
+        logits, aux = dec.forward(params, cfg, batch["tokens"], extra)
+        labels = batch["labels"]
+        if is_vlm:  # loss only on text positions (after the patch prefix)
+            logits = logits[:, cfg.n_patches :]
+        l, metrics = cross_entropy_loss(logits, labels, vocab_size=cfg.vocab_size)
+        metrics["aux_loss"] = aux
+        return l + aux, metrics
+
+    def forward(params, batch):
+        params = unwrap(params)
+        extra = batch.get("patch_embeds") if is_vlm else None
+        logits, _ = dec.forward(params, cfg, batch["tokens"], extra)
+        return logits
+
+    def init_state(batch, max_len):
+        return dec.init_decode_state(cfg, batch, max_len)
+
+    def prefill(params, batch, state):
+        params = unwrap(params)
+        extra = batch.get("patch_embeds") if is_vlm else None
+        return dec.prefill(params, cfg, batch["tokens"], state, extra)
+
+    def decode(params, token, state):
+        return dec.decode_step(unwrap(params), cfg, token, state)
+
+    def input_specs(shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        B, T = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+        t_text = T - cfg.n_patches if is_vlm else T
+        specs = {"tokens": jax.ShapeDtypeStruct((B, t_text), i32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, t_text), i32)
+        if is_vlm:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), cfg.cdtype)
+        return specs
+
+    return Model(cfg, init, loss, forward, init_state, prefill, decode, input_specs)
+
+
+# ------------------------------ encoder-decoder --------------------------------
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def init(key):
+        return encdec.init_encdec(key, cfg)
+
+    def loss(params, batch):
+        params = unwrap(params)
+        logits, aux = encdec.forward(params, cfg, batch["frames"], batch["tokens"])
+        l, metrics = cross_entropy_loss(logits, batch["labels"], vocab_size=cfg.vocab_size)
+        metrics["aux_loss"] = aux
+        return l + aux, metrics
+
+    def forward(params, batch):
+        params = unwrap(params)
+        logits, _ = encdec.forward(params, cfg, batch["frames"], batch["tokens"])
+        return logits
+
+    def init_state(batch, max_len):
+        return encdec.init_state(cfg, batch, max_len)
+
+    def prefill(params, batch, state):
+        params = unwrap(params)
+        return encdec.prefill(params, cfg, batch["frames"], batch["tokens"], state)
+
+    def decode(params, token, state):
+        return encdec.decode_step(unwrap(params), cfg, token, state)
+
+    def input_specs(shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        B, T = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+        specs = {
+            "frames": jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), cfg.cdtype),
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+        return specs
+
+    return Model(cfg, init, loss, forward, init_state, prefill, decode, input_specs)
+
+
+def abstract_params(model: Model, key: Optional[jax.Array] = None):
+    """Shape/axes of the parameter tree without allocating (for dry-runs)."""
+    key = key if key is not None else jax.random.key(0)
+    tagged = jax.eval_shape(model.init, key)
+    return tagged
+
+
+def param_count(tree: Any) -> int:
+    vals = unwrap(tree)
+    return sum(int(np_prod(x.shape)) for x in jax.tree.leaves(vals))
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out

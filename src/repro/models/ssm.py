@@ -1,0 +1,238 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and Mamba-style S6.
+
+All three are implemented as exact recurrences (lax.scan over time) with a
+single-step form reused by the decoder loop -- O(1) state per token, which
+is why the ssm/hybrid archs run the long_500k decode cell that quadratic
+attention cannot.  The chunkwise-parallel mLSTM (MXU-friendly training
+form) is a recorded beyond-paper optimization lever in EXPERIMENTS.md.
+
+Shapes follow the xLSTM paper (arXiv:2405.04517) with the stabilized
+exponential gating (m-state), and Mamba (arXiv:2312.00752) selective SSM
+without the depthwise conv prelude (noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import KeyGen, dense_init, ones_init, rms_norm, zeros_init
+
+
+# =============================== mLSTM =======================================
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, Dh, Dh) matrix memory
+    n: jax.Array  # (B, H, Dh)
+    m: jax.Array  # (B, H)
+
+
+def init_mlstm(kg: KeyGen, cfg: ModelConfig, layers: int) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    Dh = d // H
+    return {
+        "wq": dense_init(kg, (layers, d, H * Dh), ("layers", "embed", "heads_x_dim"), fan_in=d),
+        "wk": dense_init(kg, (layers, d, H * Dh), ("layers", "embed", "heads_x_dim"), fan_in=d),
+        "wv": dense_init(kg, (layers, d, H * Dh), ("layers", "embed", "heads_x_dim"), fan_in=d),
+        "wi": dense_init(kg, (layers, d, H), ("layers", "embed", "heads"), fan_in=d),
+        "wf": dense_init(kg, (layers, d, H), ("layers", "embed", "heads"), fan_in=d),
+        "bf": ones_init((layers, H), ("layers", "heads")),  # forget bias > 0 helps
+        "wog": dense_init(kg, (layers, d, H * Dh), ("layers", "embed", "heads_x_dim"), fan_in=d),
+        "wo": dense_init(kg, (layers, H * Dh, d), ("layers", "heads_x_dim", "embed"), fan_in=H * Dh),
+        "gn": zeros_init((layers, H * Dh), ("layers", None)),  # per-head group norm scale
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    H = cfg.n_heads
+    Dh = cfg.d_model // H
+    f32 = jnp.float32
+    return MLSTMState(
+        C=jnp.zeros((batch, H, Dh, Dh), f32),
+        n=jnp.zeros((batch, H, Dh), f32),
+        m=jnp.full((batch, H), -1e30, f32),
+    )
+
+
+def _mlstm_cell(
+    state: MLSTMState,
+    q: jax.Array, k: jax.Array, v: jax.Array,  # (B, H, Dh)
+    it: jax.Array, ft: jax.Array,              # (B, H) pre-activations
+) -> Tuple[MLSTMState, jax.Array]:
+    Dh = q.shape[-1]
+    m_new = jnp.maximum(ft + state.m, it)                       # (B, H)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(ft + state.m - m_new)
+    C = f_g[..., None, None] * state.C + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )  # (B, H, Dh, Dh) = f*C + i * v k^T
+    n = f_g[..., None] * state.n + i_g[..., None] * k
+    h_num = jnp.einsum("bhvk,bhk->bhv", C, q)                   # C q
+    h_den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q))
+    h = h_num / jnp.maximum(h_den, 1.0)[..., None]
+    return MLSTMState(C, n, m_new), h
+
+
+def mlstm_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array, state: MLSTMState
+) -> Tuple[jax.Array, MLSTMState]:
+    """Train/prefill form: scan over time.  x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    Dh = d // H
+    dt = cfg.cdtype
+    scale = Dh**-0.5
+    q = (x @ p["wq"].astype(dt)).reshape(B, T, H, Dh).astype(jnp.float32) * scale
+    k = (x @ p["wk"].astype(dt)).reshape(B, T, H, Dh).astype(jnp.float32) * scale
+    v = (x @ p["wv"].astype(dt)).reshape(B, T, H, Dh).astype(jnp.float32)
+    it = (x @ p["wi"].astype(dt)).astype(jnp.float32)           # (B, T, H)
+    ft = (x @ p["wf"].astype(dt)).astype(jnp.float32) + p["bf"].astype(jnp.float32)
+    og = jax.nn.sigmoid((x @ p["wog"].astype(dt)).astype(jnp.float32))
+
+    def step(s, inp):
+        qt, kt, vt, i_t, f_t = inp
+        s, h = _mlstm_cell(s, qt, kt, vt, i_t, f_t)
+        return s, h
+
+    xs = (
+        q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+        it.swapaxes(0, 1), ft.swapaxes(0, 1),
+    )
+    state, hs = jax.lax.scan(step, state, xs)                   # hs: (T, B, H, Dh)
+    h = hs.swapaxes(0, 1).reshape(B, T, H * Dh)
+    h = rms_norm(h, p["gn"]) * og.reshape(B, T, H * Dh)
+    return (h.astype(dt) @ p["wo"].astype(dt)), state
+
+
+def mlstm_decode(
+    p: Dict, cfg: ModelConfig, x: jax.Array, state: MLSTMState
+) -> Tuple[jax.Array, MLSTMState]:
+    out, state = mlstm_forward(p, cfg, x, state)  # T=1 scan is the step
+    return out, state
+
+
+# =============================== sLSTM =======================================
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, Dh)
+    n: jax.Array  # (B, H, Dh)
+    h: jax.Array  # (B, H, Dh)
+    m: jax.Array  # (B, H, Dh)
+
+
+def init_slstm(kg: KeyGen, cfg: ModelConfig, layers: int) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    Dh = d // H
+    p = {}
+    for g in ("z", "i", "f", "o"):
+        p[f"w{g}"] = dense_init(kg, (layers, d, H * Dh), ("layers", "embed", "heads_x_dim"), fan_in=d)
+        p[f"r{g}"] = dense_init(
+            kg, (layers, H, Dh, Dh), ("layers", "heads", "head_dim", None), fan_in=Dh
+        )  # block-diagonal recurrent weights (per head)
+    p["bf"] = ones_init((layers, H * Dh), ("layers", None))
+    p["gn"] = zeros_init((layers, H * Dh), ("layers", None))
+    p["wo"] = dense_init(kg, (layers, H * Dh, d), ("layers", "heads_x_dim", "embed"), fan_in=H * Dh)
+    return p
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    H = cfg.n_heads
+    Dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full_like(z, -1e30))
+
+
+def slstm_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array, state: SLSTMState
+) -> Tuple[jax.Array, SLSTMState]:
+    B, T, d = x.shape
+    H = cfg.n_heads
+    Dh = d // H
+    dt = cfg.cdtype
+    f32 = jnp.float32
+    pre = {
+        g: (x @ p[f"w{g}"].astype(dt)).reshape(B, T, H, Dh).astype(f32)
+        for g in ("z", "i", "f", "o")
+    }
+    pre["f"] = pre["f"] + p["bf"].astype(f32).reshape(1, 1, H, Dh)
+    R = {g: p[f"r{g}"].astype(f32) for g in ("z", "i", "f", "o")}
+
+    def step(s, inp):
+        zx, ix, fx, ox = inp  # (B, H, Dh) each
+
+        def rec(g, hprev):
+            return jnp.einsum("bhk,hkd->bhd", hprev, R[g])
+
+        zt = jnp.tanh(zx + rec("z", s.h))
+        it = ix + rec("i", s.h)
+        ft = fx + rec("f", s.h)
+        ot = jax.nn.sigmoid(ox + rec("o", s.h))
+        m_new = jnp.maximum(ft + s.m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(ft + s.m - m_new)
+        c = f_g * s.c + i_g * zt
+        n = f_g * s.n + i_g
+        h = ot * c / jnp.maximum(n, 1.0)
+        return SLSTMState(c, n, h, m_new), h
+
+    xs = tuple(pre[g].swapaxes(0, 1) for g in ("z", "i", "f", "o"))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.swapaxes(0, 1).reshape(B, T, H * Dh)
+    h = rms_norm(h, p["gn"])
+    return (h.astype(dt) @ p["wo"].astype(dt)), state
+
+
+# =============================== Mamba (S6) ====================================
+
+class MambaState(NamedTuple):
+    S: jax.Array  # (B, d_inner, N)
+
+
+def init_mamba(kg: KeyGen, cfg: ModelConfig, layers: int) -> Dict:
+    d = cfg.d_model
+    N = cfg.ssm_state
+    return {
+        "w_in": dense_init(kg, (layers, d, d), ("layers", "embed", "ffn_inner"), fan_in=d),
+        "w_delta": dense_init(kg, (layers, d, d), ("layers", "embed", "ffn_inner"), fan_in=d),
+        "b_delta": zeros_init((layers, d), ("layers", None)),
+        "w_B": dense_init(kg, (layers, d, N), ("layers", "embed", None), fan_in=d),
+        "w_C": dense_init(kg, (layers, d, N), ("layers", "embed", None), fan_in=d),
+        "A_log": zeros_init((layers, d, N), ("layers", "ffn_inner", None)),
+        "D": ones_init((layers, d), ("layers", None)),
+        "w_out": dense_init(kg, (layers, d, d), ("layers", "ffn_inner", "embed"), fan_in=d),
+    }
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> MambaState:
+    return MambaState(jnp.zeros((batch, cfg.d_model, cfg.ssm_state), jnp.float32))
+
+
+def mamba_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array, state: MambaState
+) -> Tuple[jax.Array, MambaState]:
+    B, T, d = x.shape
+    N = cfg.ssm_state
+    dt = cfg.cdtype
+    f32 = jnp.float32
+    u = jax.nn.silu(x @ p["w_in"].astype(dt)).astype(f32)               # (B, T, d)
+    delta = jax.nn.softplus(
+        (x @ p["w_delta"].astype(dt)).astype(f32) + p["b_delta"].astype(f32)
+    )                                                                    # (B, T, d)
+    Bm = (x @ p["w_B"].astype(dt)).astype(f32)                           # (B, T, N)
+    Cm = (x @ p["w_C"].astype(dt)).astype(f32)                           # (B, T, N)
+    A = -jnp.exp(p["A_log"].astype(f32))                                 # (d, N)
+
+    def step(S, inp):
+        ut, dt_, bt, ct = inp
+        decay = jnp.exp(dt_[..., None] * A[None])                        # (B, d, N)
+        S = S * decay + (dt_ * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", S, ct)
+        return S, y
+
+    xs = (u.swapaxes(0, 1), delta.swapaxes(0, 1), Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    S, ys = jax.lax.scan(step, state.S, xs)
+    y = ys.swapaxes(0, 1) + p["D"].astype(f32) * u                       # (B, T, d)
+    return (y.astype(dt) @ p["w_out"].astype(dt)), MambaState(S)

@@ -1,0 +1,23 @@
+"""Sharding layer: logical-axis rules and mesh helpers."""
+
+from .rules import (
+    AXIS_MAP,
+    DEFAULT_RULES,
+    batch_shardings,
+    data_axes,
+    decode_state_shardings,
+    param_shardings,
+    replicated,
+    spec_for_axes,
+)
+
+__all__ = [
+    "AXIS_MAP",
+    "DEFAULT_RULES",
+    "batch_shardings",
+    "data_axes",
+    "decode_state_shardings",
+    "param_shardings",
+    "replicated",
+    "spec_for_axes",
+]

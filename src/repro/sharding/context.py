@@ -1,0 +1,77 @@
+"""Mesh context for activation sharding constraints inside model code.
+
+Models call ``constrain(x, spec_entries...)`` at a handful of well-chosen
+points (scores einsum, embeddings, logits).  Outside a mesh context (CPU
+unit tests, single-device runs) these are no-ops; the launcher and dry-run
+enter ``with activation_mesh(mesh): ...`` so the same model code lowers
+with fully sharded activations on the production meshes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def dp_axes() -> Optional[Tuple[str, ...]]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint if a mesh is active; validates divisibility.
+
+    Each entry is None, a mesh-axis name, or a tuple of mesh-axis names
+    ("__dp__" expands to the data axes).  Entries whose product does not
+    divide the corresponding dim are dropped (replicated) rather than
+    erroring, so one call site serves every architecture.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, e in zip(x.shape, entries):
+        if e == "__dp__":
+            e = dp_axes()
+        if e is None:
+            spec.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size > 1 and dim % size == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

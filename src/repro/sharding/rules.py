@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Models tag every parameter dimension with a logical name; this module maps
+those names onto the production mesh:
+
+  mesh axes:  ("data", "model")           single pod (16 x 16)
+              ("pod", "data", "model")    multi-pod  (2 x 16 x 16)
+
+Strategy (defaults; per-cell overrides drive the #Perf hillclimbs):
+  * tensor-parallel ("model"):  ffn, fused head dims (H*Dh, K*Dh), vocab.
+    Fused head dims are always divisible by 16 even when head *counts*
+    (25, 20, 24) are not -- the reshape to (H, Dh) is left to GSPMD.
+  * fully-sharded params ("data"): the `embed` dimension -- FSDP *within*
+    a pod; the "pod" axis is pure data parallelism (gradient all-reduce
+    crosses the pod boundary, parameter all-gathers never do).
+  * experts: expert-parallel over "data" when the expert count divides it,
+    else replicated with their ffn dim model-sharded.
+
+Assignment is greedy per-tensor: each dim tries its candidate mesh axes in
+priority order; an axis is taken at most once per tensor and only when the
+dim size is divisible by the axis size.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import Param, axes_of, is_param
+
+#: logical axis -> ordered mesh-axis candidates (abstract names)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("tensor",),
+    "ffn": ("tensor",),
+    "ffn_inner": ("tensor",),
+    "expert_ffn": ("tensor",),   # but see the min-shard guard below
+    "heads_x_dim": ("tensor",),
+    "kv_x_dim": ("tensor",),
+    "heads": ("tensor",),
+    "embed": ("fsdp",),
+    "embed_out": ("tensor",),
+    "experts": ("expert",),
+    # never sharded
+    "layers": (), "layers_outer": (), "head_dim": (), "kv_heads": (),
+}
+
+#: abstract name -> concrete mesh axis
+AXIS_MAP = {"tensor": "model", "fsdp": "data", "expert": "data"}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying the batch (pure DP): ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def spec_for_axes(
+    mesh: Mesh,
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+) -> P:
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        assigned = None
+        for cand in (rules.get(name, ()) if name else ()):
+            mesh_ax = AXIS_MAP.get(cand, cand)
+            if mesh_ax not in mesh.axis_names or mesh_ax in used:
+                continue
+            size = _axis_size(mesh, mesh_ax)
+            if dim % size != 0:
+                continue
+            # tiny per-expert FFNs (granite: d_ff=512) are cheaper to
+            # replicate than to TP-shard to 32-wide fragments whose
+            # dispatch collectives dwarf the compute (#Perf iteration A2)
+            if name == "expert_ffn" and dim // size < 128:
+                continue
+            assigned = mesh_ax
+            used.add(mesh_ax)
+            break
+        out.append(assigned)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, tagged_tree: Any, rules=None) -> Any:
+    """NamedSharding tree for a tagged (Param-carrying) tree.
+
+    Works on abstract trees (eval_shape output) -- no allocation.
+    """
+
+    def one(p):
+        if is_param(p):
+            spec = spec_for_axes(mesh, p.axes, p.value.shape, rules)
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, tagged_tree, is_leaf=is_param)
+
+
+def batch_shardings(mesh: Mesh, batch_specs: Any) -> Any:
+    """Shard dim 0 (global batch) over the data axes when divisible."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+
+    def one(s):
+        if s.shape and s.shape[0] % dp_size == 0 and dp_size > 1:
+            return NamedSharding(mesh, P(dp, *([None] * (len(s.shape) - 1))))
+        if s.shape and len(dp) > 1 and s.shape[0] % _axis_size(mesh, "data") == 0:
+            return NamedSharding(mesh, P("data", *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_specs)
+
+
+def decode_state_shardings(mesh: Mesh, state_abs: Any, batch: int) -> Any:
+    """Heuristic sharding for decode caches/states.
+
+    batch dim -> data axes; then the largest remaining dim divisible by
+    "model" -> model (KV seq for full-attention caches, feature dims for
+    SSM states).  Keeps every multi-GiB decode buffer fully distributed.
+    """
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    model_size = _axis_size(mesh, "model")
+
+    def one(s):
+        shape = s.shape
+        spec: list = [None] * len(shape)
+        used_batch = False
+        for i, d in enumerate(shape):
+            if d == batch and not used_batch and i <= 2:
+                if batch % dp_size == 0 and dp_size > 1:
+                    spec[i] = dp
+                    used_batch = True
+                elif batch % _axis_size(mesh, "data") == 0 and _axis_size(mesh, "data") > 1:
+                    spec[i] = "data"
+                    used_batch = True
+        # largest remaining dim divisible by model axis
+        best, best_dim = -1, 0
+        for i, d in enumerate(shape):
+            if spec[i] is None and d % model_size == 0 and d > best_dim and d >= model_size:
+                best, best_dim = i, d
+        if best >= 0:
+            spec[best] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, state_abs)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

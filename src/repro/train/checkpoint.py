@@ -1,0 +1,153 @@
+"""Mesh-agnostic, atomic, async checkpointing.
+
+Layout:  <dir>/step_<n>/arrays.npz + meta.json, plus <dir>/LATEST.
+Guarantees:
+  * atomic -- written to step_<n>.tmp.<pid>, fsync'd, then os.rename;
+    a crash mid-save can never corrupt the latest checkpoint (torn
+    directories are ignored by ``latest_step`` and garbage-collected).
+  * mesh-agnostic -- leaves are saved as *full* (unsharded) host arrays
+    with the pytree structure; ``restore`` re-shards onto whatever mesh /
+    device count the restoring job uses.  This is the elastic-scaling
+    path: save on 256 chips, restore on 64 or 512.
+  * async -- ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread, overlapping I/O with the next
+    training steps; ``wait`` joins before the next save or at exit.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_TMP_PREFIX = ".tmp."
+
+
+def _leaves(tree: Any) -> List[np.ndarray]:
+    return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3) -> None:
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._seq = itertools.count()
+
+    # -- discovery -------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and _TMP_PREFIX not in p.name:
+                try:
+                    if (p / "meta.json").exists():
+                        out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save --------------------------------------------------------------------
+    def _write(self, step: int, arrays: List[np.ndarray], meta: Dict) -> None:
+        final = self.dir / f"step_{step}"
+        tmp = self.dir / f"step_{step}{_TMP_PREFIX}{os.getpid()}.{next(self._seq)}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+        (tmp / "meta.json").write_text(json.dumps(meta))
+        with open(tmp / "meta.json", "rb+") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        (self.dir / "LATEST").write_text(str(step))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+        for p in self.dir.glob(f"*{_TMP_PREFIX}*"):
+            shutil.rmtree(p, ignore_errors=True)
+
+    def save(self, step: int, state: Any, extra_meta: Optional[Dict] = None) -> None:
+        self.wait()  # serialize with any outstanding async write
+        arrays = _leaves(state)  # host snapshot (gathers sharded arrays)
+        meta = {"step": step, "time": time.time(), "n_leaves": len(arrays)}
+        meta.update(extra_meta or {})
+        self._write(step, arrays, meta)
+
+    def save_async(self, step: int, state: Any, extra_meta: Optional[Dict] = None) -> None:
+        self.wait()
+        arrays = _leaves(state)  # snapshot NOW; write later
+        meta = {"step": step, "time": time.time(), "n_leaves": len(arrays)}
+        meta.update(extra_meta or {})
+
+        def work():
+            try:
+                self._write(step, arrays, meta)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore ---------------------------------------------------------------------
+    def restore(
+        self,
+        template: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ) -> Tuple[Any, Dict]:
+        """Restore into ``template``'s pytree structure.
+
+        ``shardings``: optional matching tree (or prefix tree via Param
+        nodes) of NamedSharding -- arrays are device_put with them, so the
+        restoring mesh is free to differ from the saving mesh.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "meta.json").read_text())
+        with np.load(d / "arrays.npz") as z:
+            arrays = [z[f"leaf_{i}"] for i in range(meta["n_leaves"])]
+        treedef = jax.tree.structure(template)
+        flat_template = jax.tree.leaves(template)
+        if len(flat_template) != len(arrays):
+            raise ValueError(
+                f"checkpoint has {len(arrays)} leaves, template needs "
+                f"{len(flat_template)} (incompatible structure)")
+        if shardings is not None:
+            flat_sh = jax.tree.leaves(shardings)
+            arrays = [jax.device_put(a, s) for a, s in zip(arrays, flat_sh)]
+        else:
+            arrays = [
+                np.asarray(a).astype(t.dtype) if hasattr(t, "dtype") else a
+                for a, t in zip(arrays, flat_template)
+            ]
+        return jax.tree.unflatten(treedef, arrays), meta

@@ -1,0 +1,91 @@
+"""PPS gradient compression (the paper's sampler as a distributed-training
+optimization).
+
+Before the gradient all-reduce crosses the slow inter-pod links, each leaf
+is sparsified by Poisson pi-ps sampling over coordinate magnitudes:
+coordinate v survives with p_v = min(1, k*|g_v|/sum|g|) and is rescaled by
+1/p_v, giving an *unbiased* estimator with expected density k/n (see
+``repro.core.jax_sampler.pps_gradient_mask``).  With error feedback the
+rejected mass is carried to the next step, recovering convergence at high
+compression.
+
+Semantics note: under pjit the all-reduce is implicit, so this transform
+models compression at the reduction boundary; the roofline accounting in
+EXPERIMENTS.md #Perf charges the inter-pod collective term with the
+compressed byte count (density * dense bytes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jax_sampler import pps_gradient_mask
+from ..models.common import unwrap
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    density: float = 0.1          # expected kept fraction per leaf
+    error_feedback: bool = True
+    min_leaf_size: int = 4096     # small leaves (norms, biases) stay dense
+
+
+class EFState(NamedTuple):
+    residual: Any  # same structure as grads
+
+
+def init_ef_state(params: Any) -> EFState:
+    return EFState(jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def compress_grads(
+    cfg: CompressionConfig,
+    grads: Any,
+    step: jax.Array,
+    ef: Optional[EFState] = None,
+) -> Tuple[Any, Optional[EFState], dict]:
+    """Returns (compressed_grads, new_ef_state, metrics)."""
+    base_key = jax.random.key(0)
+    leaves = jax.tree.leaves(unwrap(grads))
+    total = sum(l.size for l in leaves)
+    kept_acc = jnp.zeros((), jnp.float32)
+    idx = [0]
+
+    def one(g, r):
+        i = idx[0]
+        idx[0] += 1
+        gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        if g.size < cfg.min_leaf_size:
+            return gf.astype(g.dtype), jnp.zeros_like(gf), jnp.asarray(
+                g.size, jnp.float32)
+        key = jax.random.fold_in(jax.random.fold_in(base_key, i), step)
+        k = cfg.density * gf.size
+        out, keep = pps_gradient_mask(key, gf, k)
+        resid = gf - out  # unbiased: E[resid] = 0; EF carries realization
+        return out.astype(g.dtype), resid, jnp.sum(keep).astype(jnp.float32)
+
+    if ef is not None:
+        triples = jax.tree.map(one, grads, ef.residual)
+    else:
+        triples = jax.tree.map(lambda g: one(g, None), grads)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3 and not hasattr(x, "_fields")
+    out = jax.tree.map(lambda t: t[0], triples, is_leaf=is3)
+    resid = jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+    kept = sum(jax.tree.leaves(jax.tree.map(lambda t: t[2], triples, is_leaf=is3)))
+    new_ef = EFState(resid) if (ef is not None and cfg.error_feedback) else ef
+    metrics = {"compression_kept_frac": kept / max(total, 1)}
+    return out, new_ef, metrics
+
+
+def make_grad_transform(cfg: CompressionConfig) -> Callable[[Any], Any]:
+    """Stateless (no-EF) transform pluggable into make_train_step."""
+
+    def transform(grads):
+        out, _, _ = compress_grads(cfg, grads, jnp.zeros((), jnp.int32), None)
+        return out
+
+    return transform

@@ -1,0 +1,185 @@
+"""Fault-tolerant training loop.
+
+Responsibilities:
+  * jit/pjit the train step against the provided mesh (or single host)
+  * deterministic data (step-indexed) or DIPS importance sampling with
+    O(1) per-example weight feedback
+  * periodic async checkpoints + auto-resume from the latest one
+    (crash-kill-restart leaves the run bit-identical to an uninterrupted
+    one when the pipeline is step-indexed; see tests/test_fault_tolerance)
+  * straggler monitoring with pluggable mitigation
+  * optional PPS gradient compression (error feedback carried in-loop)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..data.pipeline import DIPSSamplingPipeline, StaticPipeline
+from ..models.model import Model
+from ..sharding import batch_shardings, param_shardings
+from ..sharding.context import activation_mesh
+from .checkpoint import CheckpointManager
+from .compression import CompressionConfig, compress_grads, init_ef_state
+from .optimizer import OptimizerConfig, adamw_update
+from .step import TrainState, init_train_state
+from .straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    use_dips_pipeline: bool = False
+    dips_pool: int = 2048
+    compression: Optional[CompressionConfig] = None
+    crash_at_step: Optional[int] = None  # fault-injection for tests
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        opt_cfg: OptimizerConfig,
+        tcfg: TrainerConfig,
+        mesh=None,
+    ) -> None:
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.monitor = StragglerMonitor()
+        self.metrics_log: list = []
+        self.ckpt = (
+            CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        )
+        if tcfg.use_dips_pipeline:
+            self.pipeline = DIPSSamplingPipeline(
+                tcfg.dips_pool, tcfg.seq_len, model.cfg.vocab_size, seed=tcfg.seed)
+        else:
+            self.pipeline = StaticPipeline(
+                tcfg.batch, tcfg.seq_len, model.cfg.vocab_size, seed=tcfg.seed)
+        self._build_step()
+
+    # -- step construction ------------------------------------------------------
+    def _build_step(self) -> None:
+        model, opt_cfg = self.model, self.opt_cfg
+        comp = self.tcfg.compression
+
+        def loss_and_metrics(params, batch):
+            return model.loss(params, batch)
+
+        def train_step(state: TrainState, batch, ef):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_and_metrics, has_aux=True)(state.params, batch)
+            cmetrics = {}
+            if comp is not None:
+                grads, ef, cmetrics = compress_grads(
+                    comp, grads, state.opt.step, ef)
+            params, opt, om = adamw_update(opt_cfg, state.params, grads, state.opt)
+            metrics = dict(metrics)
+            metrics.update(om)
+            metrics.update(cmetrics)
+            # per-example loss for the DIPS feedback (cheap proxy: batch loss)
+            return TrainState(params, opt), ef, metrics
+
+        if self.mesh is not None:
+            self._step = jax.jit(train_step, donate_argnums=(0, 2))
+        else:
+            self._step = jax.jit(train_step, donate_argnums=(0, 2))
+
+    def _per_example_loss(self, params, batch) -> np.ndarray:
+        # lightweight per-example signal for the importance weights
+        logits = self.model.forward(params, batch)
+        import jax.numpy as jnp
+
+        lab = batch["labels"]
+        lf = logits[..., : self.model.cfg.vocab_size].astype(jnp.float32)
+        nll = -jax.nn.log_softmax(lf, -1)
+        tok = jnp.take_along_axis(nll, lab[..., None], -1)[..., 0]
+        return np.asarray(tok.mean(-1))
+
+    # -- main loop ------------------------------------------------------------------
+    def run(self, resume: bool = True) -> Dict[str, Any]:
+        tcfg = self.tcfg
+        key = jax.random.key(tcfg.seed)
+        state = init_train_state(self.model, key)
+        ef = init_ef_state(state.params) if tcfg.compression else None
+        start_step = 0
+        if self.ckpt and resume and self.ckpt.latest_step() is not None:
+            (state, ef_restored), meta = self.ckpt.restore((state, ef))
+            ef = ef_restored
+            start_step = meta["step"]
+            if isinstance(self.pipeline, DIPSSamplingPipeline) and "pipeline" in meta:
+                self.pipeline.load_state_dict(
+                    {"weights": np.asarray(meta["pipeline"], np.float64)})
+            print(f"[trainer] resumed from step {start_step}")
+
+        ctx = activation_mesh(self.mesh) if self.mesh is not None else None
+        if ctx:
+            ctx.__enter__()
+        try:
+            last_metrics: Dict[str, Any] = {}
+            for step in range(start_step, tcfg.steps):
+                if tcfg.crash_at_step is not None and step == tcfg.crash_at_step:
+                    print(f"[trainer] injected crash at step {step}", flush=True)
+                    import os
+
+                    os._exit(42)  # simulated hard node failure
+                t0 = time.time()
+                if isinstance(self.pipeline, DIPSSamplingPipeline):
+                    batch_np = self.pipeline.batch(tcfg.batch)
+                else:
+                    batch_np = self.pipeline.batch_at(step)
+                batch = {
+                    k: jax.numpy.asarray(v)
+                    for k, v in batch_np.items()
+                    if k in ("tokens", "labels", "patch_embeds", "frames")
+                }
+                state, ef, metrics = self._step(state, batch, ef)
+                loss = float(metrics["loss"])
+                if isinstance(self.pipeline, DIPSSamplingPipeline):
+                    per_ex = self._per_example_loss(state.params, batch)
+                    self.pipeline.update_weights(batch_np["example_ids"], per_ex)
+                dur = time.time() - t0
+                self.monitor.record(step, dur)
+                row = {"step": step, "loss": loss, "sec": dur}
+                self.metrics_log.append(row)
+                last_metrics = {k: float(v) for k, v in metrics.items()}
+                if step % tcfg.log_every == 0:
+                    print(f"[trainer] step {step:5d} loss {loss:.4f} "
+                          f"({dur*1e3:.0f} ms)", flush=True)
+                next_step = step + 1
+                if self.ckpt and next_step % tcfg.ckpt_every == 0:
+                    extra = {}
+                    if isinstance(self.pipeline, DIPSSamplingPipeline):
+                        extra["pipeline"] = self.pipeline.state_dict()[
+                            "weights"].tolist()
+                    self.ckpt.save_async(next_step, (state, ef), extra_meta=extra)
+            if self.ckpt:
+                self.ckpt.wait()
+                if self.ckpt.latest_step() != tcfg.steps:
+                    extra = {}
+                    if isinstance(self.pipeline, DIPSSamplingPipeline):
+                        extra["pipeline"] = self.pipeline.state_dict()[
+                            "weights"].tolist()
+                    self.ckpt.save(tcfg.steps, (state, ef), extra_meta=extra)
+            return {"state": state, "metrics": last_metrics,
+                    "log": self.metrics_log,
+                    "straggler_events": len(self.monitor.events)}
+        finally:
+            if ctx:
+                ctx.__exit__(None, None, None)
+            if self.ckpt:
+                self.ckpt.wait()

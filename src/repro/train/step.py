@@ -1,0 +1,61 @@
+"""Train / serve step builders shared by the launcher, dry-run and tests.
+
+``TrainState`` keeps everything (params + both Adam moments) as tagged
+trees, so one call to ``sharding.param_shardings`` places the whole state
+(ZeRO-sharded optimizer included).  Steps are pure and donate-friendly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .optimizer import OptimizerConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(model: Model, key: jax.Array) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=init_opt_state(params))
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: OptimizerConfig,
+    grad_transform: Optional[Callable[[Any], Any]] = None,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_transform`` is the hook used by the PPS gradient-compression
+    feature (applied to the gradient tree before the optimizer update).
+    """
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch)
+        return metrics
+
+    return eval_step

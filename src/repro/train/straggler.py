@@ -1,0 +1,94 @@
+"""Straggler detection and mitigation hooks.
+
+On a real multi-pod fleet the per-host step time distribution develops a
+slow tail (thermal throttling, failing HBM, noisy neighbours).  The monitor
+keeps an EWMA/variance estimate of step durations and flags steps beyond
+``threshold`` x EWMA.  Mitigations are pluggable callbacks; the built-in
+one rebalances the data-shard assignment away from the slow host (advisory
+on single-host CPU, exercised for real by the fleet launcher).
+
+The detector is deliberately clock-agnostic (pass your own ``now``) so the
+unit tests drive it with a fake clock.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    host: int
+    duration: float
+    ewma: float
+    ratio: float
+
+
+class StragglerMonitor:
+    def __init__(
+        self,
+        threshold: float = 2.0,
+        ewma_alpha: float = 0.1,
+        warmup_steps: int = 5,
+        on_straggler: Optional[Callable[[StragglerEvent], None]] = None,
+    ) -> None:
+        self.threshold = threshold
+        self.alpha = ewma_alpha
+        self.warmup = warmup_steps
+        self.on_straggler = on_straggler
+        self.ewma: Dict[int, float] = {}
+        self.count: Dict[int, int] = {}
+        self.events: List[StragglerEvent] = []
+
+    def record(self, step: int, duration: float, host: int = 0) -> Optional[StragglerEvent]:
+        n = self.count.get(host, 0)
+        prev = self.ewma.get(host, duration)
+        ewma = duration if n == 0 else (1 - self.alpha) * prev + self.alpha * duration
+        self.count[host] = n + 1
+        event = None
+        if n >= self.warmup and prev > 0 and duration > self.threshold * prev:
+            event = StragglerEvent(step, host, duration, prev, duration / prev)
+            self.events.append(event)
+            if self.on_straggler is not None:
+                self.on_straggler(event)
+            # do not fold outliers into the baseline
+        else:
+            self.ewma[host] = ewma
+        return event
+
+
+class ShardRebalancer:
+    """Data-shard reassignment policy: slow hosts shed shards to fast ones.
+
+    ``assignment[h]`` is the list of data-shard ids host h currently owns.
+    ``rebalance`` moves one shard from the straggler to the least-loaded
+    host; repeated events drain the slow host gradually (and a recovered
+    host earns shards back through ``restore``).
+    """
+
+    def __init__(self, n_hosts: int, n_shards: int) -> None:
+        self.assignment: Dict[int, List[int]] = {
+            h: [s for s in range(n_shards) if s % n_hosts == h]
+            for h in range(n_hosts)
+        }
+
+    def rebalance(self, slow_host: int) -> Optional[int]:
+        if len(self.assignment.get(slow_host, [])) <= 1:
+            return None  # never fully drain: the host still heartbeats
+        target = min(self.assignment, key=lambda h: len(self.assignment[h]))
+        if target == slow_host:
+            return None
+        shard = self.assignment[slow_host].pop()
+        self.assignment[target].append(shard)
+        return shard
+
+    def restore(self, recovered_host: int) -> Optional[int]:
+        donor = max(self.assignment, key=lambda h: len(self.assignment[h]))
+        if donor == recovered_host or len(self.assignment[donor]) <= 1:
+            return None
+        shard = self.assignment[donor].pop()
+        self.assignment[recovered_host].append(shard)
+        return shard

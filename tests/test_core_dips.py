@@ -1,0 +1,243 @@
+"""Core DIPS correctness: distributions, dynamics, invariants, edge cases."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from hypothesis.stateful import RuleBasedStateMachine, initialize, invariant, rule
+
+from repro.core import (
+    ALL_METHODS,
+    DIPS,
+    BruteForcePPS,
+    PPSInstance,
+    R_BSS,
+    R_HSS,
+    R_ODSS,
+    max_abs_error,
+)
+from repro.core.pps import any_success_probability, truncated_geometric
+from repro.core.samplers import BoundedRatioSampler, DynamicWeightedArray
+
+
+def empirical_counts(idx, repeats, rng):
+    counts = {}
+    for _ in range(repeats):
+        for k in idx.query(rng):
+            counts[k] = counts.get(k, 0) + 1
+    return counts
+
+
+# ------------------------- building blocks ------------------------------------
+
+def test_dynamic_weighted_array_ops():
+    arr = DynamicWeightedArray([("a", 1.0), ("b", 2.0), ("c", 3.0)])
+    assert len(arr) == 3 and arr.total == 6.0
+    arr.change_w("b", 5.0)
+    assert arr.total == 9.0 and arr.weight("b") == 5.0
+    w = arr.delete("a")
+    assert w == 1.0 and len(arr) == 2 and "a" not in arr
+    # swap-with-last kept positions consistent
+    assert arr.weight("c") == 3.0 and arr.weight("b") == 5.0
+
+
+def test_truncated_geometric_distribution(rng):
+    p, t = 0.3, 6
+    q = any_success_probability(p, t)
+    counts = np.zeros(t)
+    n = 40000
+    for _ in range(n):
+        g = truncated_geometric(rng, p, q)
+        assert 0 <= g < t
+        counts[g] += 1
+    expect = np.array([p * (1 - p) ** i / q for i in range(t)])
+    assert np.abs(counts / n - expect).max() < 0.01
+
+
+def test_bounded_ratio_sampler_distribution(rng):
+    # weights within ratio b=4 of wbar
+    items = [(i, 1.0 + 3.0 * rng.random()) for i in range(20)]
+    samp = BoundedRatioSampler(wbar=4.0, items=items)
+    W = samp.total
+    R = 30000
+    counts = {}
+    for _ in range(R):
+        out = []
+        samp.query_into(0.8, 0.9, rng, out)  # c=0.8, thinning 0.9
+        for k in out:
+            counts[k] = counts.get(k, 0) + 1
+    for k, w in items:
+        expect = 0.9 * 0.8 * w / W
+        assert abs(counts.get(k, 0) / R - expect) < 0.015
+
+
+# ------------------------- full index distribution ------------------------------
+
+@pytest.mark.parametrize("method", ["DIPS", "R-HSS", "R-BSS", "R-ODSS", "BruteForce"])
+@pytest.mark.parametrize("c", [1.0, 0.6])
+def test_query_distribution(method, c, rng):
+    items = {i: float(w) for i, w in enumerate(rng.lognormal(0, 3, 60))}
+    cls = ALL_METHODS[method]
+    kw = {"leaf_threshold": 4} if method == "DIPS" else {}
+    idx = cls(dict(items), c=c, seed=7, **kw)
+    R = 20000
+    counts = empirical_counts(idx, R, rng)
+    err = max_abs_error(PPSInstance(items, c=c), counts, R)
+    assert err < 0.02, f"{method} max abs error {err}"
+
+
+def test_dips_extreme_weight_insert(rng):
+    """The paper's motivating case: insert weight n^3 shifts every prob."""
+    n = 200
+    idx = DIPS({i: float(i + 1) for i in range(n)}, seed=3, leaf_threshold=4)
+    idx.insert("huge", float(n**3))
+    assert abs(idx.inclusion_probability("huge") - n**3 / (n**3 + n * (n + 1) / 2)) < 1e-9
+    R = 20000
+    counts = empirical_counts(idx, R, rng)
+    err = max_abs_error(idx.to_instance(), counts, R)
+    assert err < 0.02
+    # and remove it again
+    idx.delete("huge")
+    idx.check_invariants()
+
+
+def test_dips_wide_dynamic_range(rng):
+    weights = {0: 1e-12, 1: 1e-6, 2: 1.0, 3: 1e6, 4: 1e12, 5: 3.7e3, 6: 0.04}
+    idx = DIPS(dict(weights), seed=1, leaf_threshold=2)
+    idx.check_invariants()
+    R = 30000
+    counts = empirical_counts(idx, R, rng)
+    err = max_abs_error(idx.to_instance(), counts, R)
+    assert err < 0.02
+
+
+def test_dips_zero_weights_and_transitions():
+    idx = DIPS({"a": 0.0, "b": 2.0}, seed=0)
+    assert idx.inclusion_probability("a") == 0.0
+    idx.change_w("a", 3.0)        # zero -> positive
+    idx.change_w("b", 0.0)        # positive -> zero
+    assert idx.inclusion_probability("b") == 0.0
+    assert abs(idx.inclusion_probability("a") - 1.0) < 1e-12
+    idx.check_invariants()
+    for _ in range(50):
+        out = idx.query()
+        assert "b" not in out
+
+
+def test_dips_empty_and_single():
+    idx = DIPS({}, seed=0)
+    assert idx.query() == []
+    idx.insert("x", 5.0)
+    hits = sum("x" in idx.query() for _ in range(200))
+    assert hits == 200  # c=1, single element => always sampled
+    idx.delete("x")
+    assert idx.query() == []
+
+
+def test_dips_rebuild_on_doubling(rng):
+    idx = DIPS({i: 1.0 + rng.random() for i in range(20)}, seed=0, leaf_threshold=4)
+    for i in range(20, 100):  # force several rebuilds
+        idx.insert(i, float(rng.lognormal(0, 2)))
+        if i % 7 == 0:
+            idx.check_invariants()
+    for i in range(90):  # mass deletion -> halving rebuilds
+        idx.delete(i)
+        if i % 13 == 0:
+            idx.check_invariants()
+    idx.check_invariants()
+
+
+def test_update_preserves_distribution(rng):
+    idx = DIPS({i: float(rng.lognormal(0, 2) + 0.1) for i in range(40)},
+               seed=5, leaf_threshold=4)
+    for step in range(300):
+        op = rng.integers(3)
+        keys = list(range(200))
+        present = [k for k in keys if k in idx]
+        if op == 0 or len(present) < 10:
+            k = int(rng.integers(200))
+            if k not in idx:
+                idx.insert(k, float(rng.lognormal(0, 4)))
+        elif op == 1:
+            idx.delete(present[rng.integers(len(present))])
+        else:
+            idx.change_w(present[rng.integers(len(present))],
+                         float(rng.lognormal(0, 4)))
+    idx.check_invariants()
+    R = 20000
+    counts = empirical_counts(idx, R, rng)
+    assert max_abs_error(idx.to_instance(), counts, R) < 0.025
+
+
+# ------------------------- hypothesis property tests -----------------------------
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ws=st.lists(st.floats(1e-6, 1e6), min_size=1, max_size=40),
+       c=st.floats(0.05, 1.0))
+def test_total_weight_and_probs_consistent(ws, c):
+    items = {i: w for i, w in enumerate(ws)}
+    idx = DIPS(dict(items), c=c, seed=0, leaf_threshold=4)
+    assert math.isclose(idx.total_weight, sum(ws), rel_tol=1e-9)
+    s = sum(idx.inclusion_probability(k) for k in items)
+    assert math.isclose(s, c, rel_tol=1e-9)
+    idx.check_invariants()
+
+
+class DIPSMachine(RuleBasedStateMachine):
+    """Random op sequences preserve structural invariants + exact totals."""
+
+    def __init__(self):
+        super().__init__()
+        self.model = {}
+        self.idx = DIPS({}, seed=0, leaf_threshold=3, b=2)
+        self.next_key = 0
+        self.peak = 1.0
+
+    @rule(w=st.floats(1e-9, 1e9))
+    def insert(self, w):
+        self.idx.insert(self.next_key, w)
+        self.model[self.next_key] = w
+        self.next_key += 1
+        self.peak = max(self.peak, w)
+
+    @rule(data=st.data(), w=st.floats(1e-9, 1e9))
+    def change(self, data, w):
+        if not self.model:
+            return
+        k = data.draw(st.sampled_from(sorted(self.model)))
+        self.idx.change_w(k, w)
+        self.model[k] = w
+        self.peak = max(self.peak, w)
+
+    @rule(data=st.data())
+    def delete(self, data):
+        if not self.model:
+            return
+        k = data.draw(st.sampled_from(sorted(self.model)))
+        self.idx.delete(k)
+        del self.model[k]
+
+    @rule()
+    def query(self):
+        out = self.idx.query()
+        assert len(set(out)) == len(out)  # a subset: no duplicates
+        for k in out:
+            assert k in self.model and self.model[k] > 0
+
+    @invariant()
+    def structure_ok(self):
+        assert len(self.idx) == len(self.model)
+        live = sum(w for w in self.model.values() if w > 0)
+        # float-drift tolerance scales with the largest magnitude ever seen
+        assert math.isclose(self.idx.total_weight, live,
+                            rel_tol=1e-6, abs_tol=max(1e-9, 1e-10 * self.peak))
+        self.idx.check_invariants()
+
+
+TestDIPSMachine = DIPSMachine.TestCase
+TestDIPSMachine.settings = settings(
+    max_examples=20, stateful_step_count=30, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])

@@ -1,0 +1,127 @@
+"""Device-side batched samplers: marginals, independence, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    bucketed_change_w,
+    bucketed_sample,
+    build_bucketed_index,
+    expected_sample_size,
+    inclusion_probs,
+    marginal_probs,
+    pps_bernoulli_mask,
+    pps_gradient_mask,
+    pps_sample_indices,
+)
+
+
+def test_flat_mask_marginals(rng):
+    w = rng.lognormal(0, 2, 300).astype(np.float32)
+    m = pps_bernoulli_mask(jax.random.key(0), jnp.asarray(w), 0.7, batch=30000)
+    emp = np.asarray(m).mean(0)
+    truth = 0.7 * w / w.sum()
+    assert np.abs(emp - truth).max() < 0.01
+
+
+def test_flat_mask_rows_independent():
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    m = np.asarray(pps_bernoulli_mask(jax.random.key(1), w, 1.0, batch=4000))
+    # row correlation of first element across batch ~ 0
+    col = m[:, 2].astype(float)
+    r = np.corrcoef(col[:-1], col[1:])[0, 1]
+    assert abs(r) < 0.05
+
+
+def test_sample_indices_counts(rng):
+    w = rng.lognormal(0, 1, 100).astype(np.float32)
+    ids, cnt = pps_sample_indices(jax.random.key(2), jnp.asarray(w), 0.9,
+                                  batch=5000, cap=16)
+    ids = np.asarray(ids)
+    cnt = np.asarray(cnt)
+    assert float(cnt.mean()) == pytest.approx(0.9, abs=0.05)
+    for b in range(50):  # padding contract
+        assert np.all(ids[b, cnt[b]:] == 100)
+        assert np.all(ids[b, :cnt[b]] < 100)
+
+
+def test_expected_sample_size_equals_c(rng):
+    w = jnp.asarray(rng.lognormal(0, 2, 64).astype(np.float32))
+    assert float(expected_sample_size(w, 0.35)) == pytest.approx(0.35, rel=1e-5)
+
+
+# ------------------------- bucketed (TPU-adapted) ------------------------------
+
+def test_bucketed_marginals_match_flat(rng):
+    w = rng.lognormal(0, 2.5, 500)
+    idx = build_bucketed_index(w, b=4)
+    B = 150000
+    ids, cnt = bucketed_sample(jax.random.key(3), idx, 0.8, batch=B, cap=64)
+    hits = np.zeros(len(w) + 1)
+    np.add.at(hits, np.asarray(ids).ravel(), 1)
+    emp = hits[: len(w)] / B
+    truth = np.asarray(marginal_probs(idx, 0.8))
+    assert np.abs(emp - truth).max() < 0.008
+    assert float(np.asarray(cnt).mean()) == pytest.approx(0.8, abs=0.02)
+
+
+def test_bucketed_no_duplicate_ids():
+    w = np.linspace(1, 50, 40)
+    idx = build_bucketed_index(w, b=2)
+    ids, cnt = bucketed_sample(jax.random.key(4), idx, 1.0, batch=2000, cap=32)
+    ids = np.asarray(ids)
+    for b in range(200):
+        row = ids[b][ids[b] < 40]
+        assert len(np.unique(row)) == len(row)
+
+
+def test_bucketed_change_w_in_bucket():
+    w = np.asarray([1.5, 2.5, 10.0, 40.0])
+    idx = build_bucketed_index(w, b=4)
+    new, ok = bucketed_change_w(idx, jnp.int32(1), jnp.float32(3.9))
+    assert bool(ok)
+    assert float(new.total) == pytest.approx(w.sum() + 1.4, rel=1e-5)
+    # out-of-bucket move is refused (host falls back to rebuild)
+    new2, ok2 = bucketed_change_w(idx, jnp.int32(1), jnp.float32(100.0))
+    assert not bool(ok2)
+    assert float(new2.total) == pytest.approx(w.sum(), rel=1e-5)
+
+
+# ------------------------- gradient compression ----------------------------------
+
+def test_gradient_mask_unbiased(rng):
+    g = jnp.asarray(rng.normal(size=2048), jnp.float32)
+    acc = jnp.zeros_like(g)
+    K = 600
+    for i in range(K):
+        out, keep = pps_gradient_mask(jax.random.key(i), g, 256.0)
+        acc = acc + out
+    est = acc / K
+    rel = float(jnp.linalg.norm(est - g) / jnp.linalg.norm(g))
+    assert rel < 0.2  # 1/sqrt(K) scaling of the unbiased estimator
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n=st.integers(16, 512), frac=st.floats(0.05, 0.9))
+def test_gradient_mask_density(n, frac):
+    rng = np.random.default_rng(n)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    k = frac * n
+    _, keep = pps_gradient_mask(jax.random.key(0), g, k)
+    # E[kept] <= k (exactly k when no prob clips at 1)
+    kept = float(jnp.sum(keep))
+    assert kept <= n
+    p = np.minimum(1.0, k * np.abs(np.asarray(g)) / np.abs(np.asarray(g)).sum())
+    assert kept == pytest.approx(p.sum(), abs=4 * np.sqrt(p.sum()) + 1)
+
+
+def test_gradient_mask_big_coords_always_kept():
+    g = jnp.asarray([100.0, 0.001, 0.001, 0.001])
+    out, keep = pps_gradient_mask(jax.random.key(0), g, 2.0)
+    assert bool(keep[0])
+    assert float(out[0]) == pytest.approx(100.0)  # p=1 -> no rescale

@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pps_sample.ops import pps_sample_mask, pps_sample_mask_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ------------------------------ pps_sample ------------------------------------
+
+@pytest.mark.parametrize("n,batch,c", [
+    (128, 8, 1.0),
+    (100, 64, 0.5),      # unaligned n -> padding path
+    (513, 17, 0.25),     # both dims unaligned
+    (2048, 256, 1.0),    # tile-exact
+    (64, 300, 0.05),
+])
+def test_pps_kernel_bit_exact(n, batch, c, rng):
+    w = jnp.asarray(rng.lognormal(0, 2, n), jnp.float32)
+    key = jax.random.key(42)
+    kern = pps_sample_mask(key, w, c, batch=batch, tb=8, tn=128)
+    ref = pps_sample_mask_ref(key, w, c, batch=batch, tb=8, tn=128)
+    assert kern.shape == (batch, n) and kern.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(ref))
+
+
+@pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16, jnp.float64])
+def test_pps_kernel_weight_dtypes(wdtype, rng):
+    w = jnp.asarray(rng.lognormal(0, 1, 256), wdtype)
+    key = jax.random.key(0)
+    kern = pps_sample_mask(key, w, 0.8, batch=64, tb=8, tn=128)
+    ref = pps_sample_mask_ref(key, w, 0.8, batch=64, tb=8, tn=128)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(ref))
+
+
+def test_pps_kernel_statistics(rng):
+    w = jnp.asarray(rng.lognormal(0, 2, 400), jnp.float32)
+    mask = pps_sample_mask(jax.random.key(7), w, 0.9, batch=20000, tb=8, tn=128)
+    emp = np.asarray(mask).mean(0)
+    p = np.minimum(0.9 * np.asarray(w) / float(jnp.sum(w)), 1.0)
+    assert np.abs(emp - p).max() < 0.012
+
+
+def test_pps_kernel_zero_total():
+    w = jnp.zeros(128, jnp.float32)
+    mask = pps_sample_mask(jax.random.key(0), w, 1.0, batch=16, tb=8, tn=128)
+    assert int(np.asarray(mask).sum()) == 0
+
+
+# ------------------------------ flash attention --------------------------------
+
+CASES = [
+    # B, Hq, Hkv, Tq, Tk, D, causal, window
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 4, 1, 256, 256, 64, True, 64),    # MQA + sliding window
+    (2, 2, 2, 100, 100, 32, True, 0),     # unaligned lengths
+    (1, 8, 4, 1, 384, 64, True, 0),       # decode: single query
+    (1, 4, 4, 64, 64, 128, False, 0),     # bidirectional (encoder)
+    (1, 6, 2, 192, 320, 64, True, 0),     # Tq < Tk (chunked prefill tail)
+    (1, 4, 4, 128, 128, 256, True, 0),    # gemma-style head_dim 256
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Tq,Tk,D,causal,window", CASES)
+def test_flash_matches_ref_f32(B, Hq, Hkv, Tq, Tk, D, causal, window):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Tq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, Tk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, Tk, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, tq=128, tk=128)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Tq,Tk,D,causal,window", CASES[:4])
+def test_flash_matches_ref_bf16(B, Hq, Hkv, Tq, Tk, D, causal, window):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Tq, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, Hkv, Tk, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, Hkv, Tk, D), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=causal, window=window, tq=128, tk=128)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=0.05, atol=0.05)
+
+
+def test_flash_tiny_window_rows_without_keys():
+    """window=1: each position attends only itself."""
+    q = jax.random.normal(jax.random.key(0), (1, 2, 64, 32), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (1, 2, 64, 32), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (1, 2, 64, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=1, tq=64, tk=64)
+    ref = attention_ref(q, k, v, causal=True, window=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,123 @@
+"""Lemma 3.4 lookup table: paper Example 3.6, digit surgery, exactness."""
+
+import collections
+import math
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import DIPS, RoundedLookup
+from repro.core.pps import PPSInstance, max_abs_error
+
+
+def test_paper_example_3_6():
+    """S={1,2}, wbar=(4,3), r=16 -> lambda=52, A_52 = [2x{}, 8x{1}, 3x{2}, 12x{1,2}]."""
+    t = RoundedLookup([(1, 4.0), (2, 3.0)], radix=16)
+    assert t.lam == 52
+    assert t.Wbar == 7
+    table = t._table_for_lambda()
+    assert len(table) == (7 - 2) ** 2 == 25
+    cnt = collections.Counter(table.tolist())
+    assert cnt == {0b00: 2, 0b01: 8, 0b10: 3, 0b11: 12}
+
+
+def test_example_3_5_rounding_is_corrected(rng):
+    """Naive rounded sampling is biased (paper Example 3.5); the table +
+    rejection recovers the exact probabilities."""
+    weights = {"1": 2.9, "2": 7.0, "3": 3.1, "4": 4.7}
+    t = RoundedLookup(list(weights.items()), radix=64)
+    R = 150000
+    counts = {}
+    for _ in range(R):
+        out = []
+        t.query_into(1.0, rng, out)
+        for k in out:
+            counts[k] = counts.get(k, 0) + 1
+    inst = PPSInstance(dict(weights), c=1.0)
+    assert max_abs_error(inst, counts, R) < 0.01
+    # element "1" specifically: naive rounding would give 3/19 = 0.158,
+    # the correct value is 2.9/17.7 = 0.1638
+    assert abs(counts["1"] / R - 2.9 / 17.7) < 0.01
+
+
+def test_change_w_digit_surgery_matches_reencode():
+    t = RoundedLookup([("a", 3.5), ("b", 9.2), ("c", 2.01)], radix=32)
+    t.change_w("b", 4.4)
+    t.change_w("a", 7.9)
+    fresh = RoundedLookup([("a", 7.9), ("b", 4.4), ("c", 2.01)], radix=32)
+    assert t.lam == fresh.lam
+    assert t.Wbar == fresh.Wbar
+    assert t.W == pytest.approx(fresh.W)
+
+
+def test_factorized_equals_materialized():
+    items = [("a", 2.2), ("b", 3.9), ("c", 1.5)]
+    tm = RoundedLookup(items, radix=16, use_materialized=True)
+    tf = RoundedLookup(items, radix=16, use_materialized=False)
+    # identical subset distribution by construction
+    dm = tm.subset_distribution()
+    table = tm._table_for_lambda()
+    counts = collections.Counter(table.tolist())
+    size = len(table)
+    for mask, p in dm.items():
+        assert abs(counts.get(mask, 0) / size - p) < 1e-12
+    # statistical agreement of full query path
+    rng = np.random.default_rng(0)
+    R = 60000
+    out_m, out_f = {}, {}
+    for _ in range(R):
+        o = []
+        tm.query_into(0.9, rng, o)
+        for k in o:
+            out_m[k] = out_m.get(k, 0) + 1
+        o = []
+        tf.query_into(0.9, rng, o)
+        for k in o:
+            out_f[k] = out_f.get(k, 0) + 1
+    for k, _ in items:
+        assert abs(out_m.get(k, 0) / R - out_f.get(k, 0) / R) < 0.012
+
+
+def test_invalid_leaf_falls_back_exactly(rng):
+    # single element and weight-1 boundaries violate Lemma 3.4 preconditions
+    t = RoundedLookup([("only", 5.0)], radix=16)
+    assert not t.is_valid()
+    R = 5000
+    hits = 0
+    for _ in range(R):
+        out = []
+        t.query_into(1.0, rng, out)
+        hits += len(out)
+    assert hits == R  # p = 1
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ws=st.lists(st.floats(1.01, 30.0), min_size=2, max_size=5),
+       c=st.floats(0.2, 1.0))
+def test_lookup_distribution_property(ws, c):
+    rng = np.random.default_rng(42)
+    items = [(i, w) for i, w in enumerate(ws)]
+    t = RoundedLookup(items, radix=64)
+    R = 30000
+    counts = {}
+    for _ in range(R):
+        out = []
+        t.query_into(c, rng, out)
+        for k in out:
+            counts[k] = counts.get(k, 0) + 1
+    inst = PPSInstance(dict(items), c=c)
+    assert max_abs_error(inst, counts, R) < 0.025
+
+
+def test_dips_with_table_leaf(rng):
+    items = {i: float(rng.lognormal(2, 1) + 1.5) for i in range(80)}
+    idx = DIPS(dict(items), b=2, leaf_threshold=4, leaf_backend="table", seed=9)
+    R = 20000
+    counts = {}
+    for _ in range(R):
+        for k in idx.query():
+            counts[k] = counts.get(k, 0) + 1
+    assert max_abs_error(idx.to_instance(), counts, R) < 0.02
