@@ -3,20 +3,55 @@
 Default sizes are scaled for a single-core CI container; ``--full`` runs
 paper-scale n.  Every function prints ``name,us_per_call,derived`` rows and
 returns structured records for EXPERIMENTS.md generation.
+
+Methods come from the ``repro.engine`` registry (see common.METHODS), so
+host and device backends are benchmarked side by side: figs 1-2 cover the
+whole registry, figs 3-4 default to the host engines (paper scale, n up
+to 10M, would drown CPU-interpret device paths).
 """
 
 from __future__ import annotations
 
 import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import max_abs_error
 from repro.core.pps import PPSInstance
+from repro.engine import available_engines
 
-from .common import DISTRIBUTIONS, METHODS, csv_row, make_items, time_queries, time_updates
+from .common import (
+    DISTRIBUTIONS,
+    METHODS,
+    csv_row,
+    make_items,
+    time_engine_queries,
+    time_updates,
+    update_ops_for,
+)
+
+#: Theta(B*n) device paths (flat mask + CPU-interpret Pallas) pay a large
+#: per-query constant off-accelerator; bound their repeat budgets so
+#: fig1/fig2 stay container-friendly.  (jax-bucketed is output-sensitive
+#: and needs no cap -- that asymmetry is the paper's point.)
+_QUERY_REPEAT_CAP = {"pallas-mask": 20_000, "jax-flat": 20_000}
+
+
+def _count_batched(engine, counts: Dict, todo: int, seed: int,
+                   chunk: int = 1024) -> None:
+    """Accumulate key counts for ``todo`` queries via query_batch."""
+    import jax
+
+    done = 0
+    while done < todo:
+        b = min(chunk, todo - done)
+        ids, cnts = engine.query_batch(jax.random.key(seed + done), b)
+        for ks in engine.decode_batch(ids, cnts):
+            for k in ks:
+                counts[k] = counts.get(k, 0) + 1
+        done += b
 
 
 # ---------------------------- Fig 1: correctness ------------------------------
@@ -38,11 +73,19 @@ def bench_correctness(n: int = 10_000, updates: int = 1000,
         counts: Dict = {}
         done = 0
         inst = PPSInstance(dict(items), c=1.0)
+        cap = _QUERY_REPEAT_CAP.get(name, repeat_grid[-1])
         for target in repeat_grid:
-            while done < target:
-                for k in idx.query(rng):
-                    counts[k] = counts.get(k, 0) + 1
-                done += 1
+            target = min(target, cap)
+            if target <= done:
+                continue
+            if getattr(idx, "NATIVE_BATCH", False):
+                _count_batched(idx, counts, target - done, seed + done)
+            else:
+                while done < target:
+                    for k in idx.query(rng):
+                        counts[k] = counts.get(k, 0) + 1
+                    done += 1
+            done = target
             err = max_abs_error(inst, counts, done)
             rows.append({"fig": "fig1", "method": name, "repeats": done,
                          "max_abs_error": err})
@@ -60,8 +103,9 @@ def bench_tradeoff(n: int = 100_000, dist: str = "lognormal",
     for name, ctor in METHODS.items():
         items = make_items(dist, n, seed)
         idx = ctor(dict(items), 1.0, seed)
-        tq = time_queries(idx, q_reps, rng)
-        ops = 2000 if name in ("DIPS", "BruteForce") else 5
+        reps = min(q_reps, _QUERY_REPEAT_CAP.get(name, q_reps))
+        tq = time_engine_queries(idx, reps, rng, seed)
+        ops = update_ops_for(idx, fast=2000, slow=5)
         tu = time_updates(idx, n, ops, rng, lambda: gen(rng, 1)[0])
         rows.append({"fig": "fig2", "method": name, "n": n,
                      "query_us": tq * 1e6, "update_us": tu * 1e6})
@@ -74,7 +118,10 @@ def bench_tradeoff(n: int = 100_000, dist: str = "lognormal",
 
 def bench_query(ns=(10_000, 100_000, 1_000_000), dists=("exponential", "lognormal"),
                 cs=(1.0, 0.4), q_reps: int = 2000, seed: int = 0,
-                methods=("DIPS", "R-ODSS", "R-BSS", "R-HSS")) -> List[dict]:
+                methods: Optional[tuple] = None) -> List[dict]:
+    if methods is None:
+        methods = tuple(m for m in available_engines(kind="host")
+                        if m != "host-brute")
     rows = []
     rng = np.random.default_rng(seed)
     for dist in dists:
@@ -83,7 +130,8 @@ def bench_query(ns=(10_000, 100_000, 1_000_000), dists=("exponential", "lognorma
                 items = make_items(dist, n, seed)
                 for name in methods:
                     idx = METHODS[name](dict(items), c, seed)
-                    tq = time_queries(idx, q_reps, rng)
+                    reps = min(q_reps, _QUERY_REPEAT_CAP.get(name, q_reps))
+                    tq = time_engine_queries(idx, reps, rng, seed)
                     rows.append({"fig": "fig3", "method": name, "n": n,
                                  "dist": dist, "c": c, "query_us": tq * 1e6})
                     print(csv_row(f"fig3/{name}/{dist}/c{c}/n{n}", tq * 1e6))
@@ -94,8 +142,9 @@ def bench_query(ns=(10_000, 100_000, 1_000_000), dists=("exponential", "lognorma
 
 def bench_update(ns=(10_000, 100_000, 1_000_000), dist: str = "lognormal",
                  seed: int = 0,
-                 methods=("DIPS", "R-ODSS", "R-BSS", "R-HSS", "BruteForce")
-                 ) -> List[dict]:
+                 methods: Optional[tuple] = None) -> List[dict]:
+    if methods is None:
+        methods = available_engines(kind="host")
     rows = []
     rng = np.random.default_rng(seed)
     gen = DISTRIBUTIONS[dist]
@@ -103,7 +152,7 @@ def bench_update(ns=(10_000, 100_000, 1_000_000), dist: str = "lognormal",
         items = make_items(dist, n, seed)
         for name in methods:
             idx = METHODS[name](dict(items), 1.0, seed)
-            ops = 1000 if name in ("DIPS", "BruteForce") else 4
+            ops = update_ops_for(idx, fast=1000, slow=4)
             tu = time_updates(idx, n, ops, rng, lambda: gen(rng, 1)[0])
             rows.append({"fig": "fig4", "method": name, "n": n,
                          "dist": dist, "update_us": tu * 1e6})
@@ -143,9 +192,12 @@ def bench_memory(ns=(10_000, 100_000, 1_000_000), dist: str = "lognormal",
     rows = []
     for n in ns:
         items = make_items(dist, n, seed)
-        for name in ("DIPS", "R-ODSS"):
+        for name in ("host-dips", "host-rodss"):
             idx = METHODS[name](dict(items), 1.0, seed)
-            b = _deep_bytes(idx)
+            # measure the underlying index, not the engine facade (the
+            # wrapper's slot table + weight mirror is identical overhead
+            # for every method and would compress the paper's Table 1 ratio)
+            b = _deep_bytes(getattr(idx, "_impl", idx))
             rows.append({"fig": "table1", "method": name, "n": n, "bytes": b})
             print(csv_row(f"table1/{name}/n{n}", 0.0, f"MB={b/1e6:.2f}"))
     return rows

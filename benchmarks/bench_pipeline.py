@@ -13,26 +13,36 @@ from typing import List
 
 import numpy as np
 
-from repro.core import DIPS, R_ODSS
+from repro.engine import make_engine
 
 from .common import csv_row
 
 
 def bench_pipeline_updates(pools=(1_000, 10_000, 100_000), batch: int = 64,
-                           steps: int = 20, seed: int = 0) -> List[dict]:
+                           steps: int = 20, seed: int = 0,
+                           engines=("host-dips", "host-rodss", "jax-bucketed")
+                           ) -> List[dict]:
     rows = []
     rng = np.random.default_rng(seed)
     for pool in pools:
-        for name, ctor in (("DIPS", DIPS), ("R-ODSS", R_ODSS)):
+        for name in engines:
             items = {i: 1.0 for i in range(pool)}
-            idx = ctor(items, c=1.0, seed=seed)
-            n_steps = steps if name == "DIPS" else max(2, steps // 10)
+            idx = make_engine(name, items, c=1.0, seed=seed)
+            n_steps = max(2, steps // 10) if idx.UPDATE_REBUILDS else steps
+            if idx.NATIVE_BATCH:
+                import jax
+
+                idx.query_batch(jax.random.key(99991), 1)  # compile outside timing
             t0 = time.perf_counter()
             for s in range(n_steps):
                 ids = rng.integers(0, pool, batch)
                 losses = rng.random(batch) * 10
                 for i, l in zip(ids, losses):
                     idx.change_w(int(i), float(l) + 1e-3)
+                if idx.NATIVE_BATCH:
+                    # a real pipeline samples every step; this charges the
+                    # deferred delta-buffer flush to the updates it serves
+                    idx.query_batch(jax.random.key(s), 1)
             per_update = (time.perf_counter() - t0) / (n_steps * batch)
             rows.append({"fig": "pipeline", "method": name, "pool": pool,
                          "update_us": per_update * 1e6})

@@ -1,4 +1,10 @@
-"""Shared benchmark machinery: distributions, timing, method registry."""
+"""Shared benchmark machinery: distributions, timing, engine enumeration.
+
+Methods are enumerated from the ``repro.engine`` registry, so every new
+backend automatically shows up in every benchmark scenario -- host and
+device side by side.  ``METHODS`` keeps the historical ``ctor(items, c,
+seed)`` call shape.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +13,7 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from repro.core import DIPS, BruteForcePPS, R_BSS, R_HSS, R_ODSS
+from repro.engine import available_engines, make_engine
 
 #: paper Sec 4.1 weight distributions (parameters as published; the plain
 #: normal is folded at zero to yield valid weights -- noted in DESIGN.md)
@@ -18,13 +24,14 @@ DISTRIBUTIONS: Dict[str, Callable[[np.random.Generator, int], np.ndarray]] = {
     "lognormal": lambda r, n: r.lognormal(0.0, np.sqrt(np.log(2.0)), n),
 }
 
-METHODS = {
-    "DIPS": lambda items, c, seed: DIPS(items, c=c, seed=seed),
-    "R-ODSS": lambda items, c, seed: R_ODSS(items, c=c, seed=seed),
-    "R-BSS": lambda items, c, seed: R_BSS(items, c=c, seed=seed),
-    "R-HSS": lambda items, c, seed: R_HSS(items, c=c, seed=seed),
-    "BruteForce": lambda items, c, seed: BruteForcePPS(items, c=c, seed=seed),
-}
+
+def _ctor(name: str):
+    return lambda items, c, seed: make_engine(name, items, c=c, seed=seed)
+
+
+#: every registered engine, constructed through the registry; filter by
+#: kind with repro.engine.available_engines(kind=...)
+METHODS = {name: _ctor(name) for name in available_engines()}
 
 
 def make_items(dist: str, n: int, seed: int = 0) -> Dict[int, float]:
@@ -34,21 +41,75 @@ def make_items(dist: str, n: int, seed: int = 0) -> Dict[int, float]:
 
 
 def time_queries(idx, repeats: int, rng) -> float:
-    """Mean seconds per query."""
+    """Mean seconds per single query (host cost model)."""
     t0 = time.perf_counter()
     for _ in range(repeats):
         idx.query(rng)
     return (time.perf_counter() - t0) / repeats
 
 
+def time_queries_batched(engine, repeats: int, seed: int = 0,
+                         chunk: int = 256) -> float:
+    """Mean seconds per query through query_batch (device cost model).
+
+    One warmup chunk is excluded so jit compilation does not pollute the
+    steady-state number.
+    """
+    import jax
+
+    engine.query_batch(jax.random.key(seed), chunk)  # warmup/compile
+    done = 0
+    t0 = time.perf_counter()
+    while done < repeats:
+        b = min(chunk, repeats - done)
+        if b < chunk:
+            b = chunk  # keep one compiled shape
+        engine.query_batch(jax.random.key(seed + 1 + done), b)
+        done += b
+    return (time.perf_counter() - t0) / done
+
+
+def time_engine_queries(engine, repeats: int, rng, seed: int = 0) -> float:
+    """Dispatch to the engine's natural query cost model."""
+    if getattr(engine, "NATIVE_BATCH", False):
+        return time_queries_batched(engine, repeats, seed)
+    return time_queries(engine, repeats, rng)
+
+
 def time_updates(idx, n_base: int, ops: int, rng, weight_fn) -> float:
-    """Mean seconds per update (insert+delete pairs, amortized)."""
+    """Mean seconds per update (insert+delete pairs, amortized).
+
+    Device engines defer structural work into a delta buffer that is paid
+    at the next sample; a settling query inside the timed region charges
+    that flush/rebuild to the updates so the amortized cost is honest.
+    An identical untimed dry-run cycle first compiles every shape the
+    timed cycle will hit (inserts grow the slot array, so the settle
+    shape after growth differs from the initial one), keeping one-time
+    XLA compilation out of the measurement.
+    """
+    native = getattr(idx, "NATIVE_BATCH", False)
+    if native:
+        import jax
+
+        for i in range(ops):
+            idx.insert(("warm", i), float(weight_fn()))
+        idx.query_batch(jax.random.key(1), 1)
+        for i in range(ops):
+            idx.delete(("warm", i))
+        idx.query_batch(jax.random.key(2), 1)
     t0 = time.perf_counter()
     for i in range(ops):
         idx.insert(("bench", i), float(weight_fn()))
     for i in range(ops):
         idx.delete(("bench", i))
+    if native:
+        idx.query_batch(jax.random.key(0), 1)
     return (time.perf_counter() - t0) / (2 * ops)
+
+
+def update_ops_for(engine, fast: int, slow: int) -> int:
+    """Engines whose every update is an O(n) rebuild get the small budget."""
+    return slow if getattr(engine, "UPDATE_REBUILDS", False) else fast
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:

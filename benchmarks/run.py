@@ -25,9 +25,14 @@ from pathlib import Path
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="container-scale sizes (the default; explicit flag "
+                         "for CI invocations)")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="", help="comma list: fig1,fig2,...")
     args = ap.parse_args()
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
 
     from . import bench_im, bench_paper
     from .bench_pipeline import bench_pipeline_updates

@@ -3,10 +3,14 @@
 Weighted-Cascade RR-set machinery where step (ii) of RR-set generation --
 "sample the incoming neighbours of a visited vertex" -- is exactly a
 Poisson pi-ps query over the in-edge weights (c = 1).  Each vertex carries
-its own dynamic index; edge insertions/deletions touch one vertex's index:
+its own dynamic sampler built through the ``repro.engine`` registry, so
+any backend plugs in by name:
 
-  * DIPS backend:      O(1) per edge update (paper's contribution)
-  * R-ODSS/brute:      O(in-degree) rebuild per update (SS reduction)
+  * host-dips:          O(1) per edge update (paper's contribution)
+  * host-rodss/brute:   O(in-degree) rebuild per update (SS reduction)
+  * jax-* / pallas-*:   device engines; ``rr_sets`` groups the frontier by
+    vertex and expands all RR sets visiting the same vertex with ONE
+    ``query_batch`` call (batched RR-set expansion on device).
 
 ``greedy_seed_selection`` is the standard max-coverage greedy over sampled
 RR sets (SUBSIM-style evaluation harness, scaled to container size).
@@ -19,39 +23,48 @@ from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from ..core import DIPS, BruteForcePPS, R_ODSS
-
-BACKENDS = {"DIPS": DIPS, "R-ODSS": R_ODSS, "BruteForce": BruteForcePPS}
+from ..engine import SamplerEngine, engine_kind, make_engine
 
 
 class DynamicWCGraph:
     """Directed graph under the Weighted Cascade model with per-vertex
-    dynamic PPS indexes over in-neighbour weights."""
+    dynamic PPS samplers over in-neighbour weights.
 
-    def __init__(self, n: int, backend: str = "DIPS", seed: int = 0) -> None:
+    ``backend`` is any name in the engine registry (legacy method names
+    such as "DIPS" and "R-ODSS" resolve as aliases).
+    """
+
+    def __init__(self, n: int, backend: str = "host-dips", seed: int = 0,
+                 **engine_opts) -> None:
         self.n = n
         self.backend = backend
-        self._ctor = BACKENDS[backend]
+        self.backend_kind = engine_kind(backend)
+        self._engine_opts = engine_opts
         self._seed = seed
-        self.in_index: Dict[int, object] = {}
+        self.in_index: Dict[int, SamplerEngine] = {}
         self.rng = np.random.default_rng(seed)
+
+    def _make(self, items: Dict[int, float], v: int) -> SamplerEngine:
+        return make_engine(self.backend, items, c=1.0, seed=self._seed + v,
+                           **self._engine_opts)
 
     @classmethod
     def from_edges(cls, n: int, edges: Sequence[Tuple[int, int, float]],
-                   backend: str = "DIPS", seed: int = 0) -> "DynamicWCGraph":
-        g = cls(n, backend, seed)
+                   backend: str = "host-dips", seed: int = 0,
+                   **engine_opts) -> "DynamicWCGraph":
+        g = cls(n, backend, seed, **engine_opts)
         by_target: Dict[int, Dict[int, float]] = {}
         for u, v, w in edges:
             by_target.setdefault(v, {})[u] = w
         for v, nbrs in by_target.items():
-            g.in_index[v] = g._ctor(nbrs, c=1.0, seed=seed + v)
+            g.in_index[v] = g._make(nbrs, v)
         return g
 
     # -- dynamic edge operations --------------------------------------------
     def insert_edge(self, u: int, v: int, w: float) -> None:
         idx = self.in_index.get(v)
         if idx is None:
-            idx = self.in_index[v] = self._ctor({u: w}, c=1.0, seed=self._seed + v)
+            self.in_index[v] = self._make({u: w}, v)
         else:
             idx.insert(u, w)
 
@@ -82,6 +95,49 @@ class DynamicWCGraph:
             frontier = nxt
         return visited
 
+    def rr_sets(self, count: int) -> List[Set[int]]:
+        """``count`` RR sets, expanded level-synchronously.
+
+        Per BFS round the frontier is grouped by vertex, and each vertex's
+        engine answers all RR sets that reached it with one ``query_batch``
+        -- on device engines that is a single fused program per (vertex,
+        round) instead of one dispatch per (RR set, vertex) visit.
+        """
+        import jax
+
+        targets = [int(t) for t in self.rng.integers(self.n, size=count)]
+        visited: List[Set[int]] = [{t} for t in targets]
+        frontier: List[List[int]] = [[t] for t in targets]
+        while True:
+            by_vertex: Dict[int, List[int]] = {}
+            for rr_id, verts in enumerate(frontier):
+                for v in verts:
+                    if v in self.in_index:
+                        by_vertex.setdefault(v, []).append(rr_id)
+            if not by_vertex:
+                break
+            nxt: List[List[int]] = [[] for _ in range(count)]
+            for v, rr_ids in by_vertex.items():
+                eng = self.in_index[v]
+                if len(rr_ids) == 1:
+                    samples = [eng.query(self.rng)]
+                else:
+                    key = jax.random.key(int(self.rng.integers(2**63 - 1)))
+                    # round the batch up to a power of two so frontier-size
+                    # jitter reuses a handful of compiled programs instead
+                    # of recompiling per distinct group size
+                    b = 1 << (len(rr_ids) - 1).bit_length()
+                    ids, cnts = eng.query_batch(key, b)
+                    samples = eng.decode_batch(
+                        ids[: len(rr_ids)], cnts[: len(rr_ids)])
+                for rr_id, sample in zip(rr_ids, samples):
+                    for u in sample:
+                        if u not in visited[rr_id]:
+                            visited[rr_id].add(u)
+                            nxt[rr_id].append(u)
+            frontier = nxt
+        return visited
+
 
 def greedy_seed_selection(rr_sets: List[Set[int]], k: int) -> Tuple[List[int], float]:
     """Max-coverage greedy; returns (seeds, covered fraction)."""
@@ -108,9 +164,16 @@ def greedy_seed_selection(rr_sets: List[Set[int]], k: int) -> Tuple[List[int], f
 def influence_maximization(
     graph: DynamicWCGraph, k: int, n_rr: int
 ) -> Tuple[List[int], float, float]:
-    """Sample n_rr RR sets then pick k seeds.  Returns (seeds, coverage, secs)."""
+    """Sample n_rr RR sets then pick k seeds.  Returns (seeds, coverage, secs).
+
+    Device backends use the grouped/batched expansion; host backends keep
+    the one-query-at-a-time path (identical distribution, no batching win).
+    """
     t0 = time.perf_counter()
-    rr_sets = [graph.rr_set() for _ in range(n_rr)]
+    if graph.backend_kind == "device":
+        rr_sets = graph.rr_sets(n_rr)
+    else:
+        rr_sets = [graph.rr_set() for _ in range(n_rr)]
     seeds, cov = greedy_seed_selection(rr_sets, k)
     return seeds, cov, time.perf_counter() - t0
 

@@ -22,13 +22,17 @@ from .baselines import ALL_METHODS, BruteForcePPS, R_BSS, R_HSS, R_ODSS
 from .jax_sampler import (
     expected_sample_size,
     inclusion_probs,
+    mask_to_indices,
     pps_bernoulli_mask,
     pps_gradient_mask,
     pps_sample_indices,
 )
 from .jax_index import (
     BucketedIndex,
+    bucket_ids,
     bucketed_change_w,
+    bucketed_change_w_at,
+    bucketed_change_w_batch,
     bucketed_sample,
     build_bucketed_index,
     marginal_probs,
@@ -53,6 +57,7 @@ __all__ = [
     "truncated_geometric",
     "jump_scan",
     "subcritical_scan_into",
+    "mask_to_indices",
     "pps_bernoulli_mask",
     "pps_sample_indices",
     "pps_gradient_mask",
@@ -61,6 +66,9 @@ __all__ = [
     "BucketedIndex",
     "build_bucketed_index",
     "bucketed_sample",
+    "bucket_ids",
     "bucketed_change_w",
+    "bucketed_change_w_at",
+    "bucketed_change_w_batch",
     "marginal_probs",
 ]

@@ -19,9 +19,13 @@ Lemma 3.1) -- which becomes an output-sensitive *batched* sampler on TPU:
      query, re-expressed as fixed-shape tensor ops (Poisson counts +
      gather + rejection) that jit, vmap and shard.
 
-Updates: ``change_w`` within a bucket is a device scatter (O(1), batchable);
-cross-bucket moves fall back to a host resync under the same doubling rule
-as the paper's Algorithm-4 rebuild.  See DESIGN.md "Hardware adaptation".
+Updates: ``change_w`` within a bucket is a device scatter (O(1), batchable
+via ``bucketed_change_w_at``/``bucketed_change_w_batch``); cross-bucket
+moves, inserts and deletes are absorbed by
+``repro.engine.dynamic_bucketed.DynamicBucketedIndex``, which marks them
+host-side at O(1) and rebuilds the snapshot once at the next sample --
+the Algorithm-4 idea of batching structural work into one rebuild.  See
+DESIGN.md "Hardware adaptation".
 """
 
 from __future__ import annotations
@@ -49,13 +53,23 @@ class BucketedIndex(NamedTuple):
     b: int
 
 
+def bucket_ids(w: np.ndarray, b: int) -> np.ndarray:
+    """j with b^j < w <= b^{j+1} (floor-log, boundary-repaired).
+
+    THE host-side bucket formula: the dynamic layer's in-bucket fast path
+    classifies against this, and it must match the b^j/b^{j+1} bounds the
+    device ok-check derives from it -- keep a single copy.
+    """
+    j = np.floor(np.log(w) / np.log(b)).astype(np.int64)
+    return np.where(w <= np.power(float(b), j), j - 1, j)
+
+
 def build_bucketed_index(weights: np.ndarray | jax.Array, b: int = 4) -> BucketedIndex:
     """Host-side build (sort by bucket), O(n log n) once."""
     w = np.asarray(weights, dtype=np.float64)
     if np.any(w <= 0):
         raise ValueError("BucketedIndex requires strictly positive weights")
-    j = np.floor(np.log(w) / np.log(b)).astype(np.int64)
-    j = np.where(w <= np.power(float(b), j), j - 1, j)  # b^j < w <= b^{j+1}
+    j = bucket_ids(w, b)
     order = np.argsort(j, kind="stable")
     js = j[order]
     uniq, start, count = np.unique(js, return_index=True, return_counts=True)
@@ -152,6 +166,49 @@ def bucketed_change_w(
         ),
         ok,
     )
+
+
+@jax.jit
+def bucketed_change_w_at(
+    index: BucketedIndex, pos: jax.Array, w_new: jax.Array
+) -> Tuple[BucketedIndex, jax.Array]:
+    """k in-bucket weight updates at known sorted positions: ONE O(k)
+    scatter (plus an O(k log m) bucket lookup for the validity check).
+
+    ``pos`` (k,) int32 must be distinct sorted-order positions
+    (last-write-wins scatter plus a summed total would otherwise
+    disagree); ``w_new`` (k,) f32.  Returns (new_index, ok[k]); entries
+    whose new weight leaves the bucket range are refused individually
+    (weight kept, ok=False) so the caller can route just those through
+    the structural rebuild path.
+    """
+    old = index.sorted_weights[pos]
+    bucket = jnp.searchsorted(index.bucket_start, pos, side="right") - 1
+    ok = (w_new > index.bucket_lo[bucket]) & (w_new <= index.bucket_wbar[bucket])
+    eff = jnp.where(ok, w_new, old)
+    return (
+        index._replace(
+            sorted_weights=index.sorted_weights.at[pos].set(eff),
+            total=index.total + jnp.sum(eff - old),
+        ),
+        ok,
+    )
+
+
+@jax.jit
+def bucketed_change_w_batch(
+    index: BucketedIndex, element_ids: jax.Array, w_new: jax.Array
+) -> Tuple[BucketedIndex, jax.Array]:
+    """Like ``bucketed_change_w_at`` but addressed by element id: inverts
+    the sort permutation on the fly (O(n)).  Callers that hold a cached
+    inverse permutation (``DynamicBucketedIndex``) should use the O(k)
+    positional form instead.  ``element_ids`` must be distinct.
+    """
+    n = index.sorted_ids.shape[0]
+    inv = jnp.zeros(n, jnp.int32).at[index.sorted_ids].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    return bucketed_change_w_at(index, inv[element_ids], w_new)
 
 
 def marginal_probs(index: BucketedIndex, c: float = 1.0) -> jax.Array:

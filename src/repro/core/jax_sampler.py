@@ -11,8 +11,8 @@ samplers used across the framework:
     ``repro.kernels.pps_sample`` fuses RNG + threshold so the mask is the
     only HBM traffic (see kernels/pps_sample/ops.py).
   * ``pps_sample_indices``   -- output-sensitive sampler returning padded
-    index lists; expected work Theta(B * c) after the bucket reduction of
-    ``jax_index.BucketedSampler``.
+    index lists; ``jax_index.bucketed_sample`` over a ``BucketedIndex``
+    achieves expected work Theta(B * c) via the bucket reduction.
   * ``pps_gradient_mask``    -- unbiased sparsification operator used by
     the PPS gradient-compression hook (importance ~ |g|): element kept with
     p_v = min(1, k*|g_v|/sum|g|) and scaled by 1/p_v.
@@ -47,6 +47,25 @@ def pps_bernoulli_mask(
     return u < p[None, :]
 
 
+@functools.partial(jax.jit, static_argnames=("cap",))
+def mask_to_indices(
+    mask: jax.Array, *, cap: int = 64
+) -> Tuple[jax.Array, jax.Array]:
+    """Compact a (B, n) bool mask to padded (idx[B, <=cap], count[B]).
+
+    THE padding contract shared by every sampler that emits index lists
+    (flat, bucketed, Pallas engines): hit positions first in stable order,
+    entries beyond ``count`` set to n (an out-of-range sentinel usable
+    directly for segment-sum style scatters), overflow beyond ``cap``
+    truncated deterministically from the left.
+    """
+    n = mask.shape[1]
+    order = jnp.argsort(~mask, axis=1, stable=True)  # hits first
+    count = jnp.sum(mask, axis=1).astype(jnp.int32)
+    idx = jnp.where(jnp.arange(n)[None, :] < count[:, None], order, n)
+    return idx[:, :cap].astype(jnp.int32), jnp.minimum(count, cap)
+
+
 @functools.partial(jax.jit, static_argnames=("batch", "cap"))
 def pps_sample_indices(
     key: jax.Array,
@@ -58,17 +77,10 @@ def pps_sample_indices(
 ) -> Tuple[jax.Array, jax.Array]:
     """Padded index-list form: (idx[B, cap] int32, count[B] int32).
 
-    Entries beyond ``count`` are set to n (an out-of-range sentinel usable
-    directly for segment-sum style scatters).  Overflow beyond ``cap``
-    truncates deterministically from the left (tests size cap >> E|X| = c).
+    See ``mask_to_indices`` for the padding/truncation contract.
     """
-    n = weights.shape[0]
     mask = pps_bernoulli_mask(key, weights, c, batch=batch)
-    # Stable compaction: positions of hits, padded with n.
-    order = jnp.argsort(~mask, axis=1, stable=True)  # hits first
-    count = jnp.sum(mask, axis=1).astype(jnp.int32)
-    idx = jnp.where(jnp.arange(n)[None, :] < count[:, None], order, n)
-    return idx[:, :cap].astype(jnp.int32), jnp.minimum(count, cap)
+    return mask_to_indices(mask, cap=cap)
 
 
 @jax.jit

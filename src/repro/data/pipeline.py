@@ -1,14 +1,17 @@
-"""DIPS-driven importance-sampling data pipeline (the paper's technique as
-a first-class training feature).
+"""Importance-sampling data pipeline driven by a dynamic PPS engine (the
+paper's technique as a first-class training feature).
 
 A pool of documents carries per-example weights (e.g. an EMA of recent
 loss).  Every batch is assembled by repeated Poisson pi-ps queries against
-the DIPS index -- each query costs O(1) -- and after the step the trainer
-feeds per-example losses back via ``update_weights``, each an O(1)
-``change_w``.  This is exactly the dynamic regime the paper targets: a
-single weight update changes *every* inclusion probability, yet the index
-never rebuilds.  A subset-sampling-based pipeline would pay O(pool) per
-weight update (see benchmarks/bench_pipeline.py for the measured gap).
+a ``repro.engine`` sampler -- with the default "host-dips" backend each
+query costs O(1) -- and after the step the trainer feeds per-example
+losses back via ``update_weights``, each an O(1) ``change_w``.  This is
+exactly the dynamic regime the paper targets: a single weight update
+changes *every* inclusion probability, yet the index never rebuilds.  A
+subset-sampling-based pipeline would pay O(pool) per weight update (see
+benchmarks/bench_pipeline.py for the measured gap).  Device backends
+("jax-bucketed", ...) swap in by name and serve ``sample_ids`` through
+one batched device program per call.
 
 Two estimator modes:
   * curriculum (default): plain loss-proportional sampling (biased toward
@@ -24,7 +27,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.dips import DIPS
+from ..engine import make_engine
 from . import synthetic
 
 
@@ -40,6 +43,7 @@ class DIPSSamplingPipeline:
         max_weight: float = 1e3,
         ema: float = 0.9,
         doc_fn: Optional[Callable[[int, int, int, int], np.ndarray]] = None,
+        engine: str = "host-dips",
     ) -> None:
         self.pool_size = pool_size
         self.seq_len = seq_len
@@ -48,27 +52,55 @@ class DIPSSamplingPipeline:
         self.min_weight = min_weight
         self.max_weight = max_weight
         self.ema = ema
+        self.engine_name = engine
         self._doc_fn = doc_fn or synthetic.synth_document
         self._weights = np.ones(pool_size, np.float64)
-        self._index = DIPS({i: 1.0 for i in range(pool_size)}, c=c, seed=seed)
+        self._index = make_engine(
+            engine, {i: 1.0 for i in range(pool_size)}, c=c, seed=seed)
         self._rng = np.random.default_rng(seed + 1)
         self._lock = threading.Lock()
         self.query_count = 0
 
     # -- sampling ------------------------------------------------------------
     def sample_ids(self, batch: int) -> np.ndarray:
-        """B distinct example ids via repeated O(1) PPS queries."""
+        """B distinct example ids via repeated PPS queries.
+
+        Host engines answer one O(1) query at a time; device engines are
+        asked for whole blocks of queries through ``query_batch`` so each
+        block is a single fused program.  When the pool holds fewer than
+        ``batch`` live documents the result is correspondingly shorter
+        (never blocks waiting for ids that cannot exist).
+        """
         out: List[int] = []
         seen = set()
         with self._lock:
-            while len(out) < batch:
-                self.query_count += 1
-                for k in self._index.query():
-                    if k not in seen:
-                        seen.add(k)
-                        out.append(k)
+            batch = min(batch, len(self._index))
+            if self._index.NATIVE_BATCH:
+                import jax
+
+                while len(out) < batch:
+                    key = jax.random.key(int(self._rng.integers(2**63 - 1)))
+                    block = max(64, batch)
+                    ids, cnts = self._index.query_batch(key, block)
+                    self.query_count += block
+                    for ks in self._index.decode_batch(ids, cnts):
+                        for k in ks:
+                            if k not in seen:
+                                seen.add(k)
+                                out.append(k)
+                                if len(out) == batch:
+                                    break
                         if len(out) == batch:
                             break
+            else:
+                while len(out) < batch:
+                    self.query_count += 1
+                    for k in self._index.query():
+                        if k not in seen:
+                            seen.add(k)
+                            out.append(k)
+                            if len(out) == batch:
+                                break
         return np.asarray(out[:batch], np.int64)
 
     def batch(self, batch: int) -> Dict[str, np.ndarray]:
@@ -118,7 +150,8 @@ class DIPSSamplingPipeline:
         w = state["weights"]
         with self._lock:
             self._weights = w.copy()
-            self._index = DIPS(
+            self._index = make_engine(
+                self.engine_name,
                 {i: float(max(w[i], self.min_weight)) for i in range(len(w))},
                 c=self._index.c, seed=self.seed)
 

@@ -1,0 +1,101 @@
+"""repro.engine: unified dynamic-sampling subsystem.
+
+One protocol (``SamplerEngine``), one registry, interchangeable backends:
+
+  ============== ====== ==================================================
+  name           kind   implementation
+  ============== ====== ==================================================
+  host-dips      host   ``core.DIPS`` (paper Sec 3; O(1) query + update)
+  host-rodss     host   ``core.R_ODSS`` (SS reduction; O(n) PPS update)
+  host-rbss      host   ``core.R_BSS``
+  host-rhss      host   ``core.R_HSS``
+  host-brute     host   ``core.BruteForcePPS`` (O(n) query, O(1) update)
+  jax-flat       device ``core.jax_sampler.pps_sample_indices``
+  jax-bucketed   device ``DynamicBucketedIndex`` over ``BucketedIndex``
+  pallas-mask    device fused Pallas kernel (interpret mode off-TPU)
+  ============== ====== ==================================================
+
+Legacy benchmark names ("DIPS", "R-ODSS", "R-BSS", "R-HSS", "BruteForce")
+alias the host engines.  Construct with ``make_engine(name, items, c=c,
+seed=seed)``; enumerate with ``available_engines(kind=...)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from .base import SamplerEngine, SlotTable, rng_from_key
+from .registry import (
+    EngineSpec,
+    available_engines,
+    engine_kind,
+    get_spec,
+    make_engine,
+    register_engine,
+)
+from .host import HostEngine
+
+register_engine(
+    "host-dips", "host", functools.partial(HostEngine, method="DIPS"),
+    description="paper-faithful DIPS index: O(1) query, O(1) update",
+    aliases=("DIPS", "dips"),
+)
+register_engine(
+    "host-rodss", "host", functools.partial(HostEngine, method="R-ODSS"),
+    description="SS reduction to ODSS: O(1) query, O(n) PPS update",
+    aliases=("R-ODSS",),
+)
+register_engine(
+    "host-rbss", "host", functools.partial(HostEngine, method="R-BSS"),
+    description="SS reduction to BringmannSS: static, O(n) update",
+    aliases=("R-BSS",),
+)
+register_engine(
+    "host-rhss", "host", functools.partial(HostEngine, method="R-HSS"),
+    description="SS reduction to HeterogeneousSS: O(log n + mu) query",
+    aliases=("R-HSS",),
+)
+register_engine(
+    "host-brute", "host", functools.partial(HostEngine, method="BruteForce"),
+    description="dynamic array + full scan: O(n) query, O(1) update",
+    aliases=("BruteForce",),
+)
+
+# jax is a hard dependency of repro.core (the host path imports it too),
+# so device backends register unconditionally.
+from .device import BucketedJaxEngine, FlatJaxEngine, PallasMaskEngine
+from .dynamic_bucketed import DynamicBucketedIndex
+
+register_engine(
+    "jax-flat", "device", FlatJaxEngine,
+    description="flat Bernoulli-mask compaction: Theta(B*n), batched",
+)
+register_engine(
+    "jax-bucketed", "device", BucketedJaxEngine,
+    description="dynamic bucketed index: Theta(B*b*c) candidates, batched",
+)
+register_engine(
+    "pallas-mask", "device", PallasMaskEngine,
+    description="fused Pallas mask kernel (TPU PRNG; CPU interpret)",
+)
+
+from .gradient import gradient_sampler, register_gradient_sampler  # noqa: E402
+
+__all__ = [
+    "SamplerEngine",
+    "SlotTable",
+    "HostEngine",
+    "EngineSpec",
+    "register_engine",
+    "make_engine",
+    "get_spec",
+    "available_engines",
+    "engine_kind",
+    "rng_from_key",
+    "gradient_sampler",
+    "register_gradient_sampler",
+    "FlatJaxEngine",
+    "BucketedJaxEngine",
+    "PallasMaskEngine",
+    "DynamicBucketedIndex",
+]

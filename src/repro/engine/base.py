@@ -1,0 +1,199 @@
+"""``SamplerEngine``: one dynamic Poisson pi-ps sampling API, many backends.
+
+The paper's index answers single queries in O(1) on a CPU; accelerators
+answer *batches*.  Production wants both behind one interface so callers
+(influence maximization, the data pipeline, benchmarks) never hard-code a
+backend.  Every engine maintains the same *logical* dynamic instance
+<S, w, c> and exposes:
+
+  * ``query(rng)``                      -- one PPS subset as a list of keys.
+  * ``query_batch(key, batch, cap)``    -- B independent subsets as padded
+    (ids[B, cap], counts[B]) int32 arrays; ids are *slot* indices, stable
+    across updates, decoded back to keys via ``decode_batch``/``slot_key``.
+  * ``insert / delete / change_w``      -- dynamic updates (paper Alg 4).
+  * ``inclusion_probability(key)``      -- c*w(v)/W of the logical state.
+  * ``snapshot()``                      -- frozen ``PPSInstance`` of the
+    logical state (ground truth for the host/device agreement tests).
+
+Slot contract: each key occupies an integer slot for its whole lifetime;
+slots of deleted keys are recycled.  Padding entries in ``query_batch``
+hold ``pad_id`` (>= the number of slots) -- scatter-safe sentinels, same
+convention as ``jax_sampler.pps_sample_indices``.
+
+See DESIGN.md "Engine architecture" for the backend matrix and
+``repro.engine.registry`` for construction by name.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.pps import Key, PPSInstance
+
+
+def rng_from_key(key) -> np.random.Generator:
+    """Derive a host Generator from a jax PRNG key (or a plain int seed).
+
+    Host engines consume numpy randomness; device engines consume jax keys.
+    ``query_batch`` takes the jax-style key everywhere so call sites stay
+    backend-agnostic, and host backends fold it into a numpy seed here.
+    """
+    if key is None:
+        return np.random.default_rng()
+    if isinstance(key, (int, np.integer)):
+        return np.random.default_rng(int(key))
+    import jax
+
+    data = np.asarray(jax.random.key_data(key)).ravel()
+    return np.random.default_rng(data.astype(np.uint64))
+
+
+class SlotTable:
+    """Stable key <-> integer-slot mapping with slot recycling."""
+
+    def __init__(self, keys: Iterable[Key] = ()) -> None:
+        self.keys: List[Optional[Key]] = list(keys)
+        self.key_to_slot: Dict[Key, int] = {k: i for i, k in enumerate(self.keys)}
+        if len(self.key_to_slot) != len(self.keys):
+            raise KeyError("duplicate keys")
+        self.free: List[int] = []
+
+    def __len__(self) -> int:
+        return len(self.key_to_slot)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.keys)
+
+    def slot(self, key: Key) -> int:
+        return self.key_to_slot[key]
+
+    def insert(self, key: Key) -> int:
+        if key in self.key_to_slot:
+            raise KeyError(f"duplicate key {key!r}")
+        if self.free:
+            s = self.free.pop()
+            self.keys[s] = key
+        else:
+            s = len(self.keys)
+            self.keys.append(key)
+        self.key_to_slot[key] = s
+        return s
+
+    def delete(self, key: Key) -> int:
+        s = self.key_to_slot.pop(key)
+        self.keys[s] = None
+        self.free.append(s)
+        return s
+
+
+class SamplerEngine(abc.ABC):
+    """Abstract dynamic Poisson pi-ps sampler (see module docstring)."""
+
+    #: "host" (numpy, O(1) single query) or "device" (jax, batched).
+    kind: str = "host"
+    #: True when query_batch is a native batched device program rather than
+    #: a host loop -- benchmarks use this to pick timing strategy.
+    NATIVE_BATCH: bool = False
+    #: True when a single update forces an O(n) rebuild (SS-reduction
+    #: baselines); benchmarks scale update counts down for these.
+    UPDATE_REBUILDS: bool = False
+
+    def __init__(self, items: Optional[Dict[Key, float]] = None, c: float = 1.0) -> None:
+        if not (0.0 < c <= 1.0):
+            raise ValueError(f"c must be in (0, 1], got {c}")
+        self.c = c
+        items = dict(items or {})
+        self._weights: Dict[Key, float] = {k: float(w) for k, w in items.items()}
+        self._slots = SlotTable(items.keys())
+
+    # -- dynamic operations (shared bookkeeping; backends extend) -----------
+    def insert(self, key: Key, w: float) -> None:
+        self._check_weight(w)
+        slot = self._slots.insert(key)
+        self._weights[key] = float(w)
+        self._insert_slot(slot, key, float(w))
+
+    def delete(self, key: Key) -> float:
+        w = self._weights.pop(key)
+        slot = self._slots.delete(key)
+        self._delete_slot(slot, key, w)
+        return w
+
+    def change_w(self, key: Key, w_new: float) -> None:
+        self._check_weight(w_new)
+        slot = self._slots.slot(key)  # raises on unknown key BEFORE mutating
+        self._weights[key] = float(w_new)
+        self._change_w_slot(slot, key, float(w_new))
+
+    @staticmethod
+    def _check_weight(w: float) -> None:
+        if not (w >= 0.0) or np.isinf(w):
+            raise ValueError(f"weights must be finite and >= 0, got {w}")
+
+    # -- backend hooks -------------------------------------------------------
+    @abc.abstractmethod
+    def _insert_slot(self, slot: int, key: Key, w: float) -> None: ...
+
+    @abc.abstractmethod
+    def _delete_slot(self, slot: int, key: Key, w: float) -> None: ...
+
+    @abc.abstractmethod
+    def _change_w_slot(self, slot: int, key: Key, w: float) -> None: ...
+
+    # -- queries -------------------------------------------------------------
+    @abc.abstractmethod
+    def query(self, rng: Optional[np.random.Generator] = None) -> List[Key]: ...
+
+    @abc.abstractmethod
+    def query_batch(
+        self, key, batch: int, cap: int = 64
+    ) -> Tuple[np.ndarray, np.ndarray]: ...
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._weights)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._weights
+
+    def weight(self, key: Key) -> float:
+        return self._weights[key]
+
+    @property
+    def total_weight(self) -> float:
+        return float(sum(self._weights.values()))
+
+    def inclusion_probability(self, key: Key) -> float:
+        """c*w(v)/W of the *logical* state (matches host DIPS semantics;
+        values may exceed 1 when c*w > W -- samplers clip at draw time)."""
+        W = self.total_weight
+        return 0.0 if W <= 0.0 else self.c * self._weights[key] / W
+
+    def snapshot(self) -> PPSInstance:
+        return PPSInstance(dict(self._weights), c=self.c)
+
+    @property
+    def pad_id(self) -> int:
+        """Smallest sentinel: every padding entry in query_batch is >= this."""
+        return self._slots.capacity
+
+    def slot_key(self, slot: int) -> Key:
+        k = self._slots.keys[slot]
+        if k is None:
+            raise KeyError(f"slot {slot} is empty")
+        return k
+
+    def decode_batch(
+        self, ids: np.ndarray, counts: np.ndarray
+    ) -> List[List[Key]]:
+        """Map (ids, counts) from query_batch back to per-query key lists."""
+        ids = np.asarray(ids)
+        counts = np.asarray(counts)
+        return [
+            [self.slot_key(int(s)) for s in row[:c]]
+            for row, c in zip(ids, counts)
+        ]

@@ -1,0 +1,174 @@
+"""Device-side engines: batched JAX/Pallas samplers behind the dynamic API.
+
+All three keep the logical weights in a dense host array indexed by slot
+(weight 0 = empty slot, inclusion probability exactly 0) and lazily mirror
+it to the device, so every dynamic operation is O(1) host work and the
+device pays only when a query actually runs:
+
+  * ``FlatJaxEngine``     -- ``pps_sample_indices`` over the dense vector;
+    Theta(B*n) work, bandwidth-bound, trivially dynamic (scatter/resync).
+  * ``BucketedJaxEngine`` -- ``DynamicBucketedIndex`` over the TPU-adapted
+    bucket decomposition; expected Theta(B*b*c) candidates per batch and
+    genuinely dynamic via the bounded delta buffer (no caller resync).
+  * ``PallasMaskEngine``  -- the fused Pallas mask kernel
+    (``kernels.pps_sample``); runs everywhere via interpret mode on CPU and
+    the fused hardware-PRNG path on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jax_sampler import mask_to_indices, pps_sample_indices
+from ..core.pps import Key
+from ..kernels.pps_sample.ops import pps_sample_mask
+from .base import SamplerEngine
+from .dynamic_bucketed import DynamicBucketedIndex
+
+
+class DeviceEngine(SamplerEngine):
+    """Shared dense-slot-array machinery for device backends."""
+
+    kind = "device"
+    NATIVE_BATCH = True
+
+    def __init__(
+        self,
+        items: Optional[Dict[Key, float]] = None,
+        c: float = 1.0,
+        seed: Optional[int] = None,
+    ) -> None:
+        super().__init__(items, c=c)
+        self._rng = np.random.default_rng(seed)
+        cap = max(self._slots.capacity, 1)
+        self._wnp = np.zeros(cap, np.float64)
+        for k, w in self._weights.items():
+            self._wnp[self._slots.slot(k)] = w
+        self._post_init()
+
+    def _post_init(self) -> None:  # backends override
+        pass
+
+    # -- dense array upkeep ---------------------------------------------------
+    def _set_slot(self, slot: int, w: float) -> None:
+        if slot >= self._wnp.size:
+            new = np.zeros(max(slot + 1, 2 * self._wnp.size), np.float64)
+            new[: self._wnp.size] = self._wnp
+            self._wnp = new
+        self._wnp[slot] = w
+
+    def _insert_slot(self, slot: int, key: Key, w: float) -> None:
+        self._set_slot(slot, w)
+
+    def _delete_slot(self, slot: int, key: Key, w: float) -> None:
+        self._set_slot(slot, 0.0)
+
+    def _change_w_slot(self, slot: int, key: Key, w: float) -> None:
+        self._set_slot(slot, w)
+
+    @property
+    def total_weight(self) -> float:
+        return float(self._wnp.sum())
+
+    def marginals(self) -> np.ndarray:
+        """Per-slot inclusion probability of the state query_batch samples."""
+        W = self._wnp.sum()
+        return self._wnp / W * self.c if W > 0 else np.zeros_like(self._wnp)
+
+    # -- single query via the batched path ------------------------------------
+    def query(self, rng: Optional[np.random.Generator] = None) -> List[Key]:
+        rng = rng if rng is not None else self._rng
+        key = jax.random.key(int(rng.integers(np.iinfo(np.int64).max)))
+        ids, counts = self.query_batch(key, 1)
+        return self.decode_batch(ids, counts)[0]
+
+
+class DenseMirrorEngine(DeviceEngine):
+    """Device engines whose snapshot is just the dense weight vector,
+    mirrored to the device lazily (any update invalidates, the next query
+    resyncs once)."""
+
+    def _post_init(self) -> None:
+        self._dev: Optional[jax.Array] = None
+
+    def _set_slot(self, slot: int, w: float) -> None:
+        super()._set_slot(slot, w)
+        self._dev = None  # resynced lazily at the next query
+
+    def _device_weights(self) -> jax.Array:
+        if self._dev is None:
+            self._dev = jnp.asarray(self._wnp, jnp.float32)
+        return self._dev
+
+
+class FlatJaxEngine(DenseMirrorEngine):
+    def query_batch(
+        self, key, batch: int, cap: int = 64
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        ids, cnt = pps_sample_indices(
+            key, self._device_weights(), self.c, batch=batch, cap=cap)
+        return np.asarray(ids), np.asarray(cnt)
+
+
+class BucketedJaxEngine(DeviceEngine):
+    """Delegates the dense slot array entirely to its DynamicBucketedIndex
+    (one copy of the weights, one growth path)."""
+
+    def __init__(self, items=None, c: float = 1.0, seed: Optional[int] = None,
+                 b: int = 4) -> None:
+        self._dbi_opts = dict(b=b)
+        super().__init__(items, c=c, seed=seed)
+
+    def _post_init(self) -> None:
+        self._dbi = DynamicBucketedIndex(self._wnp, **self._dbi_opts)
+        del self._wnp  # single source of truth is _dbi._w from here on
+
+    def _insert_slot(self, slot: int, key: Key, w: float) -> None:
+        self._dbi.insert_slot(slot, w)
+
+    def _delete_slot(self, slot: int, key: Key, w: float) -> None:
+        self._dbi.delete_slot(slot)
+
+    def _change_w_slot(self, slot: int, key: Key, w: float) -> None:
+        self._dbi.change_w_slot(slot, w)
+
+    @property
+    def total_weight(self) -> float:
+        return self._dbi.total
+
+    def query_batch(
+        self, key, batch: int, cap: int = 64
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        return self._dbi.sample(key, batch, cap=cap, c=self.c)
+
+    def marginals(self) -> np.ndarray:
+        return self._dbi.marginals(self.c)
+
+    @property
+    def rebuild_count(self) -> int:
+        return self._dbi.rebuild_count
+
+
+class PallasMaskEngine(DenseMirrorEngine):
+    """Fused mask kernel; interpret-mode on CPU, fused PRNG on TPU."""
+
+    def _post_init(self) -> None:
+        super()._post_init()
+        on_tpu = jax.default_backend() == "tpu"
+        self._fused = on_tpu
+        self._interpret = not on_tpu
+
+    def query_batch(
+        self, key, batch: int, cap: int = 64
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        mask = pps_sample_mask(
+            key, self._device_weights(), self.c, batch=batch,
+            fused_rng=self._fused, interpret=self._interpret,
+        )
+        ids, counts = mask_to_indices(mask.astype(bool), cap=cap)
+        return np.asarray(ids), np.asarray(counts)

@@ -1,0 +1,207 @@
+"""DynamicBucketedIndex: dynamic updates for the device-side bucket index.
+
+``core.jax_index.BucketedIndex`` is a frozen snapshot; the paper's index is
+dynamic.  This layer closes the gap with the same amortization argument as
+Algorithm 4:
+
+  * **In-bucket ``change_w``** keeps the bucket decomposition valid, so k
+    buffered updates are applied as ONE device scatter
+    (``bucketed_change_w_batch``) right before the next sample -- O(1)
+    amortized per update, no rebuild, no host/device divergence.
+  * **Structural updates** (insert, delete, cross-bucket ``change_w``) are
+    absorbed into the host-side dense weight array (the logical truth) at
+    O(1) cost each and only *marked*; the snapshot rebuild is deferred to
+    the next sample, so a burst of U structural updates costs exactly ONE
+    O(n log n) rebuild no matter how large U is.  The delta state is
+    bounded by construction (a slot appears in the dirty set at most
+    once), mirroring how Algorithm 4 batches work into the doubling-rule
+    rebuild instead of paying per operation.
+  * **Sampling** always flushes first, so ``sample`` draws from a device
+    snapshot *consistent* with the logical state -- callers never manage a
+    resync by hand (the pre-engine API forced exactly that).  Consistency
+    has a worst case: a workload that alternates one structural update
+    with one query rebuilds per query; the amortization pays off in the
+    update-burst regimes the paper benchmarks (churn phases between
+    sampling phases).  Incremental structural device updates are a
+    ROADMAP item ("fixed-shape device snapshots").
+
+Slots with weight 0 are simply absent from the snapshot, which lets the
+engine layer recycle slots without index knowledge.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jax_index import (
+    BucketedIndex,
+    bucket_ids,
+    bucketed_change_w_at,
+    bucketed_sample,
+    build_bucketed_index,
+    marginal_probs,
+)
+
+
+class DynamicBucketedIndex:
+    """Bounded delta buffer over a rebuilt ``BucketedIndex`` snapshot."""
+
+    def __init__(self, weights: np.ndarray, b: int = 4) -> None:
+        self.b = b
+        self._w = np.asarray(weights, np.float64).copy()
+        self.rebuild_count = -1  # the initial build is not an amortized cost
+        self._rebuild()
+
+    # -- snapshot (re)construction ------------------------------------------
+    def _rebuild(self) -> None:
+        live = np.nonzero(self._w > 0.0)[0]
+        self._live_slots = live.astype(np.int32)
+        # compact-id -> slot lookup incl. sentinel, cached here because it
+        # is O(n_live) to build and only changes on rebuild
+        self._lut = np.append(self._live_slots, np.int32(self._w.size))
+        self._slot_to_compact = {int(s): i for i, s in enumerate(live)}
+        if live.size:
+            self.index: Optional[BucketedIndex] = build_bucketed_index(
+                self._w[live], b=self.b
+            )
+            self._bucket_at_build = bucket_ids(self._w[live], self.b)
+            # compact-id -> sorted-position inverse, cached so each delta
+            # flush is an O(k) positional scatter instead of an O(n) invert
+            ids = np.asarray(self.index.sorted_ids)
+            inv = np.empty(ids.size, np.int32)
+            inv[ids] = np.arange(ids.size, dtype=np.int32)
+            self._compact_to_pos = inv
+        else:
+            self.index = None
+            self._bucket_at_build = np.zeros(0, np.int64)
+            self._compact_to_pos = np.zeros(0, np.int32)
+        self._n_live = int(live.size)
+        self._structural = 0
+        self._dirty: set = set()
+        self._inbucket: Dict[int, float] = {}
+        self._scatter_flushes = 0
+        self.rebuild_count += 1
+
+    def _note_structural(self, slot: int) -> None:
+        # O(1): mark only.  The rebuild is deferred to the next flush() --
+        # rebuilding eagerly mid-burst would produce snapshots that are
+        # discarded before any sample ever reads them.
+        self._dirty.add(slot)
+        self._inbucket.pop(slot, None)
+        self._structural += 1
+
+    # -- dynamic operations (slot-level) -------------------------------------
+    def _grow_to(self, slot: int) -> None:
+        if slot >= self._w.size:
+            new = np.zeros(max(slot + 1, 2 * self._w.size, 8), np.float64)
+            new[: self._w.size] = self._w
+            self._w = new
+
+    def insert_slot(self, slot: int, w: float) -> None:
+        self._grow_to(slot)
+        self._w[slot] = w
+        if w > 0.0:
+            self._n_live += 1
+            self._note_structural(slot)
+
+    def delete_slot(self, slot: int) -> None:
+        was_live = self._w[slot] > 0.0
+        self._w[slot] = 0.0
+        if was_live:
+            self._n_live -= 1
+            self._note_structural(slot)
+
+    def change_w_slot(self, slot: int, w: float) -> None:
+        w_old = self._w[slot]
+        self._w[slot] = w
+        if (w > 0.0) != (w_old > 0.0):
+            self._n_live += 1 if w > 0.0 else -1
+            self._note_structural(slot)
+            return
+        if w_old == 0.0:  # zero -> zero
+            return
+        compact = self._slot_to_compact.get(slot)
+        if (
+            compact is not None
+            and slot not in self._dirty
+            and bucket_ids(np.asarray([w]), self.b)[0]
+            == self._bucket_at_build[compact]
+        ):
+            self._inbucket[slot] = w  # last write wins; one scatter later
+        else:
+            self._note_structural(slot)
+
+    # -- flush ----------------------------------------------------------------
+    def flush(self) -> None:
+        """Make the device snapshot consistent with the logical state."""
+        if self._structural > 0:
+            self._rebuild()
+            return
+        if not self._inbucket or self.index is None:
+            return
+        slots = np.fromiter(self._inbucket.keys(), np.int64)
+        ws = np.asarray([self._inbucket[int(s)] for s in slots], np.float64)
+        pos = self._compact_to_pos[
+            [self._slot_to_compact[int(s)] for s in slots]
+        ]
+        # One O(k) positional scatter for the whole delta batch.  (Distinct
+        # delta sizes jit separate scatter programs; steady-state loops
+        # flush a constant-size batch, so this caches after one step.)
+        new_index, ok = bucketed_change_w_at(
+            self.index, jnp.asarray(pos), jnp.asarray(ws, jnp.float32)
+        )
+        self.index = new_index
+        self._inbucket.clear()
+        if not bool(np.all(np.asarray(ok))):
+            # float boundary disagreement host vs device: rebuild to be safe
+            self._rebuild()
+            return
+        # Each incremental f32 total update adds ~total*2^-24 rounding
+        # error and nothing else corrects it in a pure in-bucket workload;
+        # periodically recompute the exact sum to bound the drift.
+        self._scatter_flushes += 1
+        if self._scatter_flushes % 256 == 0:
+            self.index = self.index._replace(
+                total=jnp.sum(self.index.sorted_weights)
+            )
+
+    # -- sampling --------------------------------------------------------------
+    def sample(
+        self, key: jax.Array, batch: int, cap: int = 64, c: float = 1.0
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(slot_ids[B, cap], counts[B]); padding entries hold a value >=
+        the number of slots (scatter-safe sentinel)."""
+        self.flush()
+        if self.index is None:
+            return (
+                np.full((batch, cap), int(self._w.size), np.int32),
+                np.zeros(batch, np.int32),
+            )
+        ids, cnt = bucketed_sample(key, self.index, c, batch=batch, cap=cap)
+        # zero-weight inserts grow _w without a rebuild; keep the padding
+        # sentinel >= every live slot count (O(1), the rest of lut is valid)
+        self._lut[-1] = np.int32(self._w.size)
+        out = self._lut[np.minimum(np.asarray(ids), self._live_slots.size)]
+        return out.astype(np.int32), np.asarray(cnt, np.int32)
+
+    # -- introspection -----------------------------------------------------------
+    @property
+    def total(self) -> float:
+        return float(self._w.sum())
+
+    @property
+    def n_live(self) -> int:
+        return self._n_live
+
+    def marginals(self, c: float = 1.0) -> np.ndarray:
+        """Per-slot inclusion probability of the flushed device snapshot."""
+        self.flush()
+        out = np.zeros(self._w.size, np.float64)
+        if self.index is not None:
+            out[self._live_slots] = np.asarray(marginal_probs(self.index, c))
+        return out

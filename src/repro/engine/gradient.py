@@ -1,0 +1,60 @@
+"""Registry of gradient-sparsification samplers (train-side consumers).
+
+``train.compression`` used to hard-code ``pps_gradient_mask``; it now
+resolves its sampler here by name, so alternative samplers plug into the
+same CompressionConfig without touching the trainer:
+
+  * "pps"  -- Poisson pi-ps over |g| (unbiased; the paper's operator).
+  * "topk" -- deterministic magnitude top-k (biased; classic baseline for
+    ablations -- with error feedback it still converges).
+
+A sampler is ``fn(key, grads, k) -> (sparsified, keep_mask)`` with expected
+(or exact) kept count k, jit-safe.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jax_sampler import pps_gradient_mask
+
+GradientSampler = Callable[
+    [jax.Array, jax.Array, jax.Array], Tuple[jax.Array, jax.Array]
+]
+
+_GRADIENT_SAMPLERS: Dict[str, GradientSampler] = {}
+
+
+def register_gradient_sampler(name: str, fn: GradientSampler) -> None:
+    if name in _GRADIENT_SAMPLERS:
+        raise ValueError(f"gradient sampler {name!r} already registered")
+    _GRADIENT_SAMPLERS[name] = fn
+
+
+def gradient_sampler(name: str) -> GradientSampler:
+    try:
+        return _GRADIENT_SAMPLERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown gradient sampler {name!r}; "
+            f"available: {', '.join(sorted(_GRADIENT_SAMPLERS))}"
+        ) from None
+
+
+def topk_gradient_mask(
+    key: jax.Array, grads: jax.Array, k: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic magnitude top-k (biased; no rescale)."""
+    g = grads.reshape(-1)
+    kk = jnp.clip(jnp.asarray(k, jnp.float32), 1.0, g.size).astype(jnp.int32)
+    thresh = -jnp.sort(-jnp.abs(g))[kk - 1]
+    keep = jnp.abs(g) >= thresh
+    out = jnp.where(keep, g, 0.0)
+    return out.reshape(grads.shape), keep.reshape(grads.shape)
+
+
+register_gradient_sampler("pps", pps_gradient_mask)
+register_gradient_sampler("topk", topk_gradient_mask)

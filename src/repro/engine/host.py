@@ -1,0 +1,72 @@
+"""Host-side engines: paper-faithful DIPS plus the Sec 4 competitors.
+
+``HostEngine`` adapts any of the repo's host indexes (``repro.core.DIPS``
+and the SS-reduction baselines) to the ``SamplerEngine`` protocol.  The
+wrapped structures already implement O(1)/O(n) single queries and dynamic
+updates; this layer adds the slot table and the batched-query facade
+(a host loop -- same asymptotic cost as B single queries, which *is* the
+host cost model; device engines override with one fused program).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import ALL_METHODS
+from ..core.pps import Key
+from .base import SamplerEngine, rng_from_key
+
+
+class HostEngine(SamplerEngine):
+    kind = "host"
+    NATIVE_BATCH = False
+
+    def __init__(
+        self,
+        items: Optional[Dict[Key, float]] = None,
+        c: float = 1.0,
+        seed: Optional[int] = None,
+        method: str = "DIPS",
+        **method_kwargs,
+    ) -> None:
+        super().__init__(items, c=c)
+        ctor = ALL_METHODS[method]
+        self.method = method
+        self._impl = ctor(dict(items or {}), c=c, seed=seed, **method_kwargs)
+        self.UPDATE_REBUILDS = bool(getattr(self._impl, "UPDATE_REBUILDS", False))
+
+    # -- backend hooks -------------------------------------------------------
+    def _insert_slot(self, slot: int, key: Key, w: float) -> None:
+        self._impl.insert(key, w)
+
+    def _delete_slot(self, slot: int, key: Key, w: float) -> None:
+        self._impl.delete(key)
+
+    def _change_w_slot(self, slot: int, key: Key, w: float) -> None:
+        self._impl.change_w(key, w)
+
+    # -- queries -------------------------------------------------------------
+    def query(self, rng: Optional[np.random.Generator] = None) -> List[Key]:
+        return self._impl.query(rng)
+
+    def query_batch(
+        self, key, batch: int, cap: int = 64
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        rng = rng_from_key(key)
+        pad = self.pad_id
+        ids = np.full((batch, cap), pad, np.int32)
+        counts = np.zeros(batch, np.int32)
+        slot_of = self._slots.key_to_slot
+        for i in range(batch):
+            ks = self._impl.query(rng)
+            m = min(len(ks), cap)
+            counts[i] = m
+            for j in range(m):
+                ids[i, j] = slot_of[ks[j]]
+        return ids, counts
+
+    @property
+    def total_weight(self) -> float:
+        return float(self._impl.total_weight)

@@ -1,0 +1,85 @@
+"""Name -> engine factory registry.
+
+Consumers construct samplers exclusively through here (``make_engine``), so
+backends are interchangeable everywhere a name is accepted:
+
+    >>> eng = make_engine("jax-bucketed", {0: 1.0, 1: 3.0}, c=1.0, seed=0)
+
+Legacy method names from the paper benchmarks ("DIPS", "R-ODSS", ...)
+resolve as aliases of the host engines, keeping old call sites and saved
+benchmark configs working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from ..core.pps import Key
+from .base import SamplerEngine
+
+Factory = Callable[..., SamplerEngine]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    name: str
+    kind: str  # "host" | "device"
+    factory: Factory
+    description: str = ""
+
+
+_REGISTRY: Dict[str, EngineSpec] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_engine(
+    name: str,
+    kind: str,
+    factory: Factory,
+    description: str = "",
+    aliases: Tuple[str, ...] = (),
+) -> None:
+    if kind not in ("host", "device"):
+        raise ValueError(f"kind must be 'host' or 'device', got {kind!r}")
+    key = name.lower()
+    if key in _REGISTRY:
+        raise ValueError(f"engine {name!r} already registered")
+    _REGISTRY[key] = EngineSpec(name=name, kind=kind, factory=factory,
+                                description=description)
+    for a in aliases:
+        _ALIASES[a.lower()] = key
+
+
+def get_spec(name: str) -> EngineSpec:
+    key = name.lower()
+    key = _ALIASES.get(key, key)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown engine {name!r}; available: {', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def make_engine(
+    name: str,
+    items: Optional[Dict[Key, float]] = None,
+    c: float = 1.0,
+    seed: Optional[int] = None,
+    **kwargs,
+) -> SamplerEngine:
+    """Construct a registered engine over the instance <items, c>."""
+    return get_spec(name).factory(items, c=c, seed=seed, **kwargs)
+
+
+def available_engines(kind: Optional[str] = None) -> Tuple[str, ...]:
+    """Canonical engine names, optionally filtered by kind."""
+    return tuple(
+        spec.name for key, spec in sorted(_REGISTRY.items())
+        if kind is None or spec.kind == kind
+    )
+
+
+def engine_kind(name: str) -> str:
+    return get_spec(name).kind

@@ -13,6 +13,10 @@ Semantics note: under pjit the all-reduce is implicit, so this transform
 models compression at the reduction boundary; the roofline accounting in
 EXPERIMENTS.md #Perf charges the inter-pod collective term with the
 compressed byte count (density * dense bytes).
+
+The per-leaf sampler is resolved from ``repro.engine.gradient_sampler`` by
+name ("pps" default, "topk" baseline), so alternative sparsifiers plug in
+without touching this module.
 """
 
 from __future__ import annotations
@@ -23,7 +27,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.jax_sampler import pps_gradient_mask
+from ..engine import gradient_sampler
 from ..models.common import unwrap
 
 
@@ -32,6 +36,7 @@ class CompressionConfig:
     density: float = 0.1          # expected kept fraction per leaf
     error_feedback: bool = True
     min_leaf_size: int = 4096     # small leaves (norms, biases) stay dense
+    sampler: str = "pps"          # key into repro.engine.gradient_sampler
 
 
 class EFState(NamedTuple):
@@ -50,6 +55,7 @@ def compress_grads(
 ) -> Tuple[Any, Optional[EFState], dict]:
     """Returns (compressed_grads, new_ef_state, metrics)."""
     base_key = jax.random.key(0)
+    sample_fn = gradient_sampler(cfg.sampler)
     leaves = jax.tree.leaves(unwrap(grads))
     total = sum(l.size for l in leaves)
     kept_acc = jnp.zeros((), jnp.float32)
@@ -64,8 +70,11 @@ def compress_grads(
                 g.size, jnp.float32)
         key = jax.random.fold_in(jax.random.fold_in(base_key, i), step)
         k = cfg.density * gf.size
-        out, keep = pps_gradient_mask(key, gf, k)
-        resid = gf - out  # unbiased: E[resid] = 0; EF carries realization
+        out, keep = sample_fn(key, gf, k)
+        # residual = what this step's sampler dropped; with the default
+        # "pps" sampler E[resid] = 0 (unbiased), while biased samplers
+        # ("topk") rely on error feedback carrying resid to converge
+        resid = gf - out
         return out.astype(g.dtype), resid, jnp.sum(keep).astype(jnp.float32)
 
     if ef is not None:

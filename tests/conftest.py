@@ -11,6 +11,18 @@ REPO = Path(__file__).resolve().parent.parent
 SRC = str(REPO / "src")
 sys.path.insert(0, SRC)
 
+# Property-based test modules need hypothesis (declared in
+# requirements-dev.txt); skip -- don't error -- collection when the
+# environment lacks it so the rest of the suite still runs.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore = [
+        "test_core_dips.py",
+        "test_jax_samplers.py",
+        "test_table_lookup.py",
+    ]
+
 
 def run_subprocess(code: str, devices: int = 0, timeout: int = 600) -> str:
     """Run python code in a fresh process (own XLA device count)."""

@@ -1,0 +1,253 @@
+"""SamplerEngine subsystem: registry, host/device agreement, dynamics.
+
+The load-bearing guarantees:
+  * every registered backend maintains the same logical instance under
+    interleaved insert/delete/change_w (including cross-bucket moves) --
+    identical ``inclusion_probability`` after each op, no caller resync;
+  * device marginals (``query_batch`` empirics) match ``marginal_probs``
+    and host-DIPS empirical frequencies within statistical tolerance;
+  * the padded (ids, counts) contract is uniform across backends.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.jax_index import (
+    bucketed_change_w,
+    bucketed_change_w_batch,
+    build_bucketed_index,
+    marginal_probs,
+)
+from repro.engine import (
+    BucketedJaxEngine,
+    available_engines,
+    engine_kind,
+    get_spec,
+    make_engine,
+)
+
+ALL = available_engines()
+
+
+def lognormal_items(n, seed=0, sigma=2.0):
+    w = np.random.default_rng(seed).lognormal(0, sigma, n)
+    return {i: float(x) for i, x in enumerate(w)}
+
+
+# ------------------------------- registry -----------------------------------
+
+def test_registry_exposes_all_backends():
+    assert len(ALL) >= 4
+    assert {"host-dips", "jax-flat", "jax-bucketed", "pallas-mask"} <= set(ALL)
+    assert len(available_engines(kind="host")) >= 4
+    assert len(available_engines(kind="device")) >= 3
+
+
+def test_registry_aliases_resolve_legacy_names():
+    for legacy, canonical in [("DIPS", "host-dips"), ("R-ODSS", "host-rodss"),
+                              ("BruteForce", "host-brute")]:
+        assert get_spec(legacy).name == canonical
+    with pytest.raises(KeyError):
+        get_spec("no-such-engine")
+
+
+def test_make_engine_constructs_each_backend():
+    items = lognormal_items(40)
+    for name in ALL:
+        e = make_engine(name, dict(items), c=0.9, seed=0)
+        assert len(e) == 40
+        assert e.kind == engine_kind(name)
+        assert e.total_weight == pytest.approx(sum(items.values()), rel=1e-5)
+
+
+# ------------------------- query_batch contract ------------------------------
+
+@pytest.mark.parametrize("name", ALL)
+def test_query_batch_padding_contract(name):
+    items = lognormal_items(60, seed=3)
+    e = make_engine(name, dict(items), c=0.8, seed=0)
+    ids, counts = e.query_batch(jax.random.key(0), 40, cap=16)
+    assert ids.shape[0] == 40 and counts.shape == (40,)
+    for row, cnt in zip(ids, counts):
+        assert np.all(row[:cnt] < e.pad_id)      # valid slots first
+        assert np.all(row[cnt:] >= len(e))       # scatter-safe padding
+    decoded = e.decode_batch(ids, counts)
+    for ks, cnt in zip(decoded, counts):
+        assert len(ks) == cnt
+        assert all(k in e for k in ks)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_query_returns_keys(name):
+    items = {("k", i): 1.0 + i for i in range(30)}  # non-integer keys
+    e = make_engine(name, dict(items), c=1.0, seed=1)
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        for k in e.query(rng):
+            assert k in items
+
+
+# --------------------- host/device statistical agreement ---------------------
+
+def test_bucketed_query_batch_marginals_match_snapshot():
+    """BucketedJaxEngine empirics match marginal_probs of its snapshot."""
+    items = lognormal_items(400, seed=5, sigma=2.5)
+    e = make_engine("jax-bucketed", dict(items), c=0.8, seed=0)
+    B = 60_000
+    ids, cnt = e.query_batch(jax.random.key(7), B, cap=64)
+    counts = np.bincount(ids.ravel(), minlength=e.pad_id + 1)
+    emp = counts[: len(items)] / B
+    truth = e.marginals()[: len(items)]
+    snap = np.asarray(marginal_probs(e._dbi.index, 0.8))
+    assert np.abs(truth[e._dbi._live_slots] - snap).max() < 1e-6
+    assert np.abs(emp - truth).max() < 0.012
+    assert float(cnt.mean()) == pytest.approx(0.8, abs=0.03)
+
+
+def test_host_dips_empirical_frequencies_match_device():
+    """HostDIPSEngine empirics agree with analytic + device marginals."""
+    items = lognormal_items(50, seed=8)
+    host = make_engine("host-dips", dict(items), c=0.9, seed=0)
+    B = 30_000
+    ids, cnts = host.query_batch(jax.random.key(3), B, cap=32)
+    counts = np.bincount(ids.ravel(), minlength=host.pad_id + 1)
+    emp = counts[: len(items)] / B
+    W = sum(items.values())
+    truth = np.asarray([min(1.0, 0.9 * items[i] / W) for i in range(len(items))])
+    assert np.abs(emp - truth).max() < 0.012
+    dev = make_engine("jax-bucketed", dict(items), c=0.9, seed=0)
+    assert np.abs(dev.marginals()[: len(items)] - truth).max() < 1e-5
+
+
+# ----------------------------- dynamic agreement -------------------------------
+
+def _assert_probs_agree(engines, keys):
+    ref_name, ref = engines[0]
+    for k in keys:
+        p_ref = ref.inclusion_probability(k)
+        for name, e in engines[1:]:
+            assert e.inclusion_probability(k) == pytest.approx(
+                p_ref, rel=1e-6, abs=1e-12
+            ), f"{name} disagrees with {ref_name} on key {k}"
+
+
+def test_dynamic_ops_agree_across_all_engines():
+    """Interleaved insert/delete/change_w (incl. cross-bucket moves):
+    identical inclusion probabilities after every op, on every backend."""
+    items = lognormal_items(48, seed=11)
+    engines = [(n, make_engine(n, dict(items), c=1.0, seed=0)) for n in ALL]
+
+    def apply_all(fn):
+        for _, e in engines:
+            fn(e)
+
+    live = set(items)
+    apply_all(lambda e: e.insert("new-a", 7.5));         live.add("new-a")
+    _assert_probs_agree(engines, live)
+    apply_all(lambda e: e.change_w(0, items[0] * 1.01))  # in-bucket nudge
+    _assert_probs_agree(engines, live)
+    apply_all(lambda e: e.change_w(1, items[1] * 64.0))  # cross-bucket move
+    _assert_probs_agree(engines, live)
+    apply_all(lambda e: e.change_w(1, items[1] / 64.0))  # and back down
+    _assert_probs_agree(engines, live)
+    apply_all(lambda e: e.delete(2));                    live.discard(2)
+    _assert_probs_agree(engines, live)
+    apply_all(lambda e: e.change_w(3, 0.0))              # weight -> zero
+    _assert_probs_agree(engines, live)
+    apply_all(lambda e: e.change_w(3, 5.0))              # zero -> weight
+    _assert_probs_agree(engines, live)
+    apply_all(lambda e: e.insert("new-b", 0.0));         live.add("new-b")
+    _assert_probs_agree(engines, live)
+    for _, e in engines:
+        assert e.inclusion_probability("new-b") == 0.0
+        assert len(e) == len(live)
+        # snapshots capture the same logical instance
+        assert e.snapshot().total_weight == pytest.approx(
+            engines[0][1].snapshot().total_weight, rel=1e-6)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_change_w_unknown_key_leaves_state_untouched(name):
+    e = make_engine(name, {0: 1.0, 1: 2.0}, c=1.0, seed=0)
+    with pytest.raises(KeyError):
+        e.change_w(99, 5.0)
+    assert 99 not in e and len(e) == 2
+    assert e.snapshot().total_weight == pytest.approx(3.0)
+
+
+def test_pipeline_small_pool_never_blocks():
+    from repro.data.pipeline import DIPSSamplingPipeline
+
+    p = DIPSSamplingPipeline(pool_size=4, seq_len=8, vocab=20, seed=0)
+    ids = p.sample_ids(16)  # more than the pool holds
+    assert len(ids) == 4 and len(set(ids.tolist())) == 4
+
+
+def test_bucketed_cross_bucket_change_without_resync():
+    """The pre-engine API refused cross-bucket change_w (ok=False, caller
+    resync).  The engine absorbs it: next query samples the new weight."""
+    items = {i: 1.5 for i in range(64)}
+    e = make_engine("jax-bucketed", dict(items), c=1.0, seed=0)
+    e.change_w(0, 1.5 * 1000.0)  # far outside the original bucket
+    B = 40_000
+    ids, _ = e.query_batch(jax.random.key(1), B, cap=32)
+    emp0 = float((ids == e._slots.slot(0)).sum()) / B
+    truth0 = e.inclusion_probability(0)
+    assert emp0 == pytest.approx(min(1.0, truth0), abs=0.02)
+
+
+def test_bucketed_inbucket_deltas_flush_without_rebuild():
+    """k in-bucket updates = one scatter, zero rebuilds."""
+    # mid-bucket weights: bucket j of b=4 is (4^j, 4^{j+1}]; 2*4^j sits at
+    # its center, and nudging toward 3*4^j is guaranteed to stay inside
+    items = {i: 2.0 * 4.0 ** (i % 5) for i in range(256)}
+    e: BucketedJaxEngine = make_engine("jax-bucketed", dict(items), seed=0)
+    e.query_batch(jax.random.key(0), 4)
+    before = e.rebuild_count
+    for i in range(64):
+        e.change_w(i, 3.0 * 4.0 ** (i % 5))  # same bucket by construction
+    e.query_batch(jax.random.key(1), 4)  # flush applies one batched scatter
+    assert e.rebuild_count == before
+    assert np.abs(
+        e.marginals()[: len(items)].sum() - 1.0
+    ) < 1e-4  # c=1: marginals still sum to c
+
+
+def test_bucketed_structural_churn_amortizes_rebuilds():
+    e: BucketedJaxEngine = make_engine(
+        "jax-bucketed", lognormal_items(400, seed=17), seed=0)
+    for i in range(100):
+        e.insert(("churn", i), 2.0)
+    assert e.rebuild_count == 0       # burst marks, never rebuilds
+    e.query_batch(jax.random.key(0), 4)
+    assert e.rebuild_count == 1       # the whole burst costs ONE rebuild
+    e.query_batch(jax.random.key(1), 4)
+    assert e.rebuild_count == 1       # no structural pending: no rebuild
+
+
+# ------------------------- batched device scatter ------------------------------
+
+def test_bucketed_change_w_batch_matches_singles():
+    w = np.asarray([1.5, 2.5, 3.0, 10.0, 40.0, 1.7])
+    idx = build_bucketed_index(w, b=4)
+    ids = np.asarray([0, 2, 4], np.int32)
+    new = np.asarray([1.9, 3.5, 50.0], np.float32)
+    got, ok_b = bucketed_change_w_batch(idx, ids, new)
+    ref = idx
+    for i, wn in zip(ids, new):
+        ref, ok = bucketed_change_w(ref, i, wn)
+        assert bool(ok)
+    assert bool(np.all(np.asarray(ok_b)))
+    np.testing.assert_allclose(
+        np.asarray(got.sorted_weights), np.asarray(ref.sorted_weights))
+    assert float(got.total) == pytest.approx(float(ref.total), rel=1e-6)
+
+
+def test_bucketed_change_w_batch_refuses_out_of_bucket():
+    w = np.asarray([1.5, 2.5, 10.0, 40.0])
+    idx = build_bucketed_index(w, b=4)
+    got, ok = bucketed_change_w_batch(
+        idx, np.asarray([1, 2], np.int32), np.asarray([100.0, 12.0], np.float32))
+    assert not bool(ok[0]) and bool(ok[1])
+    assert float(got.total) == pytest.approx(w.sum() + 2.0, rel=1e-5)
