@@ -54,6 +54,61 @@ def _count_batched(engine, counts: Dict, todo: int, seed: int,
         done += b
 
 
+# --------------------- steady-state churn: recompiles + latency -----------------
+
+def bench_churn(n: int = 20_000, rounds: int = 30, batch: int = 256,
+                cap: int = 32, warmup_rounds: int = 2, seed: int = 0,
+                methods: Optional[tuple] = None) -> List[dict]:
+    """Interleaved insert/delete/change_w + samples against device engines:
+    reports XLA recompiles after warmup (the new ``compile_cache_misses``
+    counter) and post-warmup per-sample latency.
+
+    This is THE scenario size-class padding (engine/spec.py) exists for:
+    every round forces a snapshot rebuild, and without static shapes each
+    rebuild would retrace ``bucketed_sample`` -- seconds of compile where
+    DIPS pays microseconds.  A healthy run reports recompiles=0.
+    """
+    import jax
+
+    if methods is None:
+        methods = tuple(m for m in available_engines(kind="device"))
+    rows = []
+    rng = np.random.default_rng(seed)
+    for name in methods:
+        # Theta(B*n) paths off-accelerator get the small budget (same
+        # rationale as _QUERY_REPEAT_CAP); the recompile count -- the
+        # scenario's point -- is unaffected by the scale-down.
+        flat_cost = name in _QUERY_REPEAT_CAP
+        n_m = min(n, 2_000) if flat_cost else n
+        batch_m = min(batch, 32) if flat_cost else batch
+        rounds_m = min(rounds, 5) if flat_cost else rounds
+        items = make_items("lognormal", n_m, seed)
+        e = METHODS[name](dict(items), 1.0, seed)
+        misses_at = lambda: getattr(e, "compile_cache_misses", 0)
+
+        def round_trip(r: int) -> float:
+            # the steady-state serving mix: one structural pair, a small
+            # change_w batch, then one batched sample (timed)
+            e.insert(("churn", r), float(DISTRIBUTIONS["lognormal"](rng, 1)[0]))
+            e.delete(("churn", r))
+            for i in rng.integers(0, n_m, 16):
+                e.change_w(int(i), float(DISTRIBUTIONS["lognormal"](rng, 1)[0]))
+            t0 = time.perf_counter()
+            e.query_batch(jax.random.key(seed + r), batch_m, cap=cap)
+            return time.perf_counter() - t0
+
+        for r in range(warmup_rounds):
+            round_trip(r)
+        misses0 = misses_at()
+        t_sample = [round_trip(warmup_rounds + r) for r in range(rounds_m)]
+        recompiles = misses_at() - misses0
+        us = float(np.mean(t_sample)) / batch_m * 1e6
+        rows.append({"fig": "churn", "method": name, "n": n_m, "batch": batch_m,
+                     "recompiles": recompiles, "sample_us": us})
+        print(csv_row(f"churn/{name}/n{n_m}", us, f"recompiles={recompiles}"))
+    return rows
+
+
 # ---------------------------- Fig 1: correctness ------------------------------
 
 def bench_correctness(n: int = 10_000, updates: int = 1000,

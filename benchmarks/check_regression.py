@@ -1,0 +1,119 @@
+"""Perf-regression gate: diff a fresh benchmark run against history.
+
+CI runs the container-scale smoke twice per change anyway (the committed
+``benchmarks/results/bench_results.json`` is the history; the fresh run
+is a scratch file) -- this module joins the two record lists on their
+identity fields and fails when any latency metric regressed more than
+``--threshold`` (default 2x, absorbing shared-runner noise).
+
+Record identity = every non-metric field (fig, method, n, dist, c, ...);
+metrics = numeric fields ending in ``_us`` plus ``recompiles`` (any
+recompile growth under churn is a regression by definition -- that is
+the invariant the SnapshotSpec layer enforces).  Records present on only
+one side are reported but never fail the gate, so adding a scenario or
+re-scoping history does not break CI.
+
+Usage:
+  python -m benchmarks.run --quick --only fig1,pipeline,churn --out /tmp/b.json
+  python -m benchmarks.check_regression --current /tmp/b.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+#: timings under this are timer noise on shared runners; never gate on them
+MIN_BASELINE_US = 0.5
+
+#: measured outputs that identify NOTHING about a record -- excluded from
+#: the join key.  Gated: *_us latencies and recompiles.  Ungated but
+#: still non-identity: statistical/size outputs whose run-to-run noise
+#: (or platform PRNG drift) would make the join spuriously miss.
+_UNGATED_MEASUREMENTS = ("max_abs_error", "bytes", "coverage")
+
+
+def _is_measurement(k: str) -> bool:
+    return k.endswith("_us") or k == "recompiles" or k in _UNGATED_MEASUREMENTS
+
+
+def _key(rec: dict) -> Tuple:
+    return tuple(sorted(
+        (k, v) for k, v in rec.items() if not _is_measurement(k)
+    ))
+
+
+def _metrics(rec: dict) -> Dict[str, float]:
+    return {k: float(v) for k, v in rec.items()
+            if k.endswith("_us") or k == "recompiles"}
+
+
+def compare(baseline: List[dict], current: List[dict],
+            threshold: float) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes); gate fails iff regressions != []."""
+    base = {_key(r): r for r in baseline}
+    regressions, notes = [], []
+    matched = 0
+    seen = set()
+    for rec in current:
+        k = _key(rec)
+        seen.add(k)
+        if k not in base:
+            notes.append(f"no history for {dict(k)} (new scenario, skipped)")
+            continue
+        matched += 1
+        ref = _metrics(base[k])
+        for metric, now in _metrics(rec).items():
+            then = ref.get(metric)
+            if then is None:
+                continue
+            if metric == "recompiles":
+                if now > then:
+                    regressions.append(
+                        f"{dict(k)}: recompiles {then:.0f} -> {now:.0f}")
+                continue
+            if then < MIN_BASELINE_US:
+                continue
+            if now > threshold * then:
+                regressions.append(
+                    f"{dict(k)}: {metric} {then:.2f}us -> {now:.2f}us "
+                    f"({now / then:.2f}x > {threshold:.1f}x)")
+    for k in base:
+        if k not in seen:
+            notes.append(
+                f"baseline record {dict(k)} absent from this run -- "
+                f"coverage shrank (not a failure, but check --only)")
+    if matched == 0:
+        notes.append("WARNING: zero records matched history -- gate is vacuous")
+    return regressions, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default="benchmarks/results/bench_results.json")
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when current > threshold * baseline")
+    args = ap.parse_args()
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    current = json.loads(Path(args.current).read_text())
+    regressions, notes = compare(baseline, current, args.threshold)
+    for n in notes:
+        print(f"# {n}")
+    if regressions:
+        print(f"PERF REGRESSION ({len(regressions)} metric(s) > "
+              f"{args.threshold:.1f}x baseline):")
+        for r in regressions:
+            print(f"  {r}")
+        sys.exit(1)
+    print(f"perf gate OK ({len(current)} current records, "
+          f"{len(baseline)} in history)")
+
+
+if __name__ == "__main__":
+    main()

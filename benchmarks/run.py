@@ -2,8 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` (default) uses
 container-scale sizes; ``--full`` approaches paper-scale n (hours).
-Results are also dumped to benchmarks/results/bench_results.json for the
-EXPERIMENTS.md tables.
+Results are also dumped as json (``--out``, default
+benchmarks/results/bench_results.json -- the committed copy of that file
+is the CI perf-gate baseline, see benchmarks/check_regression.py) for
+the EXPERIMENTS.md tables.
 
   fig1    max-abs-error vs repeats (correctness, paper Fig 1)
   fig2    query/update tradeoff (paper Fig 2)
@@ -12,6 +14,7 @@ EXPERIMENTS.md tables.
   table1  memory usage DIPS vs R-ODSS (paper Table 1)
   fig5/6  dynamic influence maximization (paper Sec 5)
   pipeline  DIPS-vs-rebuild data-pipeline weight updates (framework)
+  churn   device-engine recompiles + sample latency under steady churn
 """
 
 from __future__ import annotations
@@ -30,6 +33,9 @@ def main() -> None:
                          "for CI invocations)")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default="", help="comma list: fig1,fig2,...")
+    ap.add_argument("--out", default="benchmarks/results/bench_results.json",
+                    help="output json path (CI writes elsewhere and diffs "
+                         "against the committed history)")
     args = ap.parse_args()
     if args.quick and args.full:
         ap.error("--quick and --full are mutually exclusive")
@@ -74,8 +80,12 @@ def main() -> None:
         all_rows += bench_pipeline_updates(
             pools=(1_000, 10_000, 100_000) if not full
             else (10_000, 100_000, 1_000_000))
+    if want("churn"):
+        all_rows += bench_paper.bench_churn(
+            n=100_000 if full else 20_000,
+            rounds=100 if full else 30)
 
-    out = Path("benchmarks/results/bench_results.json")
+    out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(all_rows, indent=1))
     print(f"# wrote {len(all_rows)} records to {out} "

@@ -44,6 +44,20 @@ def main() -> None:
     eng = make_engine("host-dips", dict(weights), c=0.5, seed=0)
     print("one query:", eng.query(np.random.default_rng(1)))
 
+    # multi-device pools: "jax-sharded" partitions slots across the mesh
+    # (1-D slot mesh over every visible device -- on a laptop that is a
+    # 1-device mesh, on a TPU pod it is the whole pod; run with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=4 to see 4 shards)
+    eng = make_engine("jax-sharded", dict(weights), c=1.0, seed=0)
+    ids, counts = eng.query_batch(jax.random.key(0), batch=512)
+    layout = eng.mesh_layout()
+    print(f"\njax-sharded: E|X|={counts.mean():.2f} over "
+          f"{layout['num_shards']} shard(s) on axis {layout['axis']!r}")
+    print(f"  devices:              {layout['devices']}")
+    print(f"  live slots per shard: {layout['live_slots_per_shard']}")
+    print(f"  size class (n,m,b):   {layout['size_class']}  "
+          f"<- rebuilds inside this class never recompile")
+
 
 if __name__ == "__main__":
     main()

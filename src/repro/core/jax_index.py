@@ -64,22 +64,66 @@ def bucket_ids(w: np.ndarray, b: int) -> np.ndarray:
     return np.where(w <= np.power(float(b), j), j - 1, j)
 
 
-def build_bucketed_index(weights: np.ndarray | jax.Array, b: int = 4) -> BucketedIndex:
-    """Host-side build (sort by bucket), O(n log n) once."""
+def build_bucketed_index(
+    weights: np.ndarray | jax.Array,
+    b: int = 4,
+    *,
+    n_pad: int | None = None,
+    m_pad: int | None = None,
+    j: np.ndarray | None = None,
+) -> BucketedIndex:
+    """Host-side build (sort by bucket), O(n log n) once.
+
+    ``n_pad``/``m_pad`` pad the element and bucket axes to a static shape
+    (size-class padding, see ``repro.engine.spec``): padded element slots
+    get weight 0 and compact ids ``n..n_pad-1``; padded buckets get count
+    0 (zero Poisson candidate rate -- a padded slot can never be drawn)
+    with positive repeated bounds so downstream ratios stay finite, and
+    ``bucket_start = n`` so ``searchsorted`` bucket lookups of live
+    positions are unaffected.  Inclusion probabilities of padded slots
+    are exactly 0; ``total`` is the true (unpadded) sum.
+
+    ``j`` lets callers that already classified the weights (to size their
+    pad classes) pass the ``bucket_ids(weights, b)`` result instead of
+    paying the O(n) log pass twice.
+    """
     w = np.asarray(weights, dtype=np.float64)
     if np.any(w <= 0):
         raise ValueError("BucketedIndex requires strictly positive weights")
-    j = bucket_ids(w, b)
+    n = w.size
+    if j is None:
+        j = bucket_ids(w, b)
     order = np.argsort(j, kind="stable")
     js = j[order]
     uniq, start, count = np.unique(js, return_index=True, return_counts=True)
+    m = uniq.size
+    if n_pad is not None and n_pad < n:
+        raise ValueError(f"n_pad={n_pad} < live size {n}")
+    if m_pad is not None and m_pad < m:
+        raise ValueError(f"m_pad={m_pad} < bucket count {m}")
+    n_pad = n if n_pad is None else int(n_pad)
+    m_pad = m if m_pad is None else int(m_pad)
+
+    sw = np.zeros(n_pad, np.float64)
+    sw[:n] = w[order]
+    sid = np.arange(n_pad, dtype=np.int64)
+    sid[:n] = order
+    bstart = np.full(m_pad, n, np.int64)
+    bstart[:m] = start
+    bcount = np.zeros(m_pad, np.int64)
+    bcount[:m] = count
+    last_hi = float(b) ** (uniq[-1] + 1) if m else 1.0
+    bwbar = np.full(m_pad, last_hi, np.float64)
+    bwbar[:m] = np.power(float(b), uniq + 1)
+    blo = np.full(m_pad, last_hi, np.float64)
+    blo[:m] = np.power(float(b), uniq)
     return BucketedIndex(
-        sorted_weights=jnp.asarray(w[order], dtype=jnp.float32),
-        sorted_ids=jnp.asarray(order, dtype=jnp.int32),
-        bucket_start=jnp.asarray(start, dtype=jnp.int32),
-        bucket_count=jnp.asarray(count, dtype=jnp.int32),
-        bucket_wbar=jnp.asarray(np.power(float(b), uniq + 1), dtype=jnp.float32),
-        bucket_lo=jnp.asarray(np.power(float(b), uniq), dtype=jnp.float32),
+        sorted_weights=jnp.asarray(sw, dtype=jnp.float32),
+        sorted_ids=jnp.asarray(sid, dtype=jnp.int32),
+        bucket_start=jnp.asarray(bstart, dtype=jnp.int32),
+        bucket_count=jnp.asarray(bcount, dtype=jnp.int32),
+        bucket_wbar=jnp.asarray(bwbar, dtype=jnp.float32),
+        bucket_lo=jnp.asarray(blo, dtype=jnp.float32),
         total=jnp.asarray(w.sum(), dtype=jnp.float32),
         b=b,
     )

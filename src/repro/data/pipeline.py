@@ -54,7 +54,9 @@ class DIPSSamplingPipeline:
         self.ema = ema
         self.engine_name = engine
         self._doc_fn = doc_fn or synthetic.synth_document
-        self._weights = np.ones(pool_size, np.float64)
+        # the engine's logical mirror IS the weight state -- no parallel
+        # array to keep in sync (weights are clamped before change_w, so
+        # reading back through the engine returns clamped values)
         self._index = make_engine(
             engine, {i: 1.0 for i in range(pool_size)}, c=c, seed=seed)
         self._rng = np.random.default_rng(seed + 1)
@@ -109,8 +111,16 @@ class DIPSSamplingPipeline:
             self._doc_fn(self.seed, int(i), self.seq_len + 1, self.vocab)
             for i in ids
         ])
-        W = self._index.total_weight
-        q = np.asarray([self._weights[i] for i in ids]) / max(W, 1e-30)
+        with self._lock:
+            # re-acquired after sample_ids: a concurrent remove_document
+            # may have deleted a sampled id -- report probability 0 for it
+            # rather than crash (update_weights likewise skips unknowns)
+            W = self._index.total_weight
+            probs = []
+            for raw in ids:
+                i = int(raw)
+                probs.append(self._index.weight(i) if i in self._index else 0.0)
+            q = np.asarray(probs) / max(W, 1e-30)
         return {
             "tokens": toks[:, :-1].astype(np.int32),
             "labels": toks[:, 1:].astype(np.int32),
@@ -120,22 +130,22 @@ class DIPSSamplingPipeline:
 
     # -- feedback (the dynamic updates) ----------------------------------------
     def update_weights(self, ids: np.ndarray, losses: np.ndarray) -> None:
-        """O(1) change_w per example -- the paper's dynamic operation."""
+        """O(1) change_w per example -- the paper's dynamic operation.
+
+        Ids removed from the pool since they were sampled are skipped.
+        """
         with self._lock:
             for i, loss in zip(ids, losses):
                 i = int(i)
-                w_old = self._weights[i]
+                if i not in self._index:
+                    continue
+                w_old = self._index.weight(i)
                 w_new = self.ema * w_old + (1 - self.ema) * float(loss)
                 w_new = float(np.clip(w_new, self.min_weight, self.max_weight))
-                self._weights[i] = w_new
                 self._index.change_w(i, w_new)
 
     def add_document(self, doc_id: int, weight: float = 1.0) -> None:
         with self._lock:
-            self._weights = (
-                np.append(self._weights, weight)
-                if doc_id >= len(self._weights) else self._weights
-            )
             self._index.insert(doc_id, weight)
 
     def remove_document(self, doc_id: int) -> None:
@@ -144,15 +154,26 @@ class DIPSSamplingPipeline:
 
     # -- checkpointing ------------------------------------------------------------
     def state_dict(self) -> Dict[str, np.ndarray]:
-        return {"weights": self._weights.copy()}
+        """Dense weights-by-doc-id array read back from the engine (removed
+        documents hold 0 and are skipped on restore)."""
+        with self._lock:
+            items = {
+                int(i): float(wv)
+                for i, wv in self._index.snapshot().weights.items()
+                if isinstance(i, (int, np.integer))
+            }
+            w = np.zeros(max(items, default=-1) + 1, np.float64)
+            for i, wv in items.items():
+                w[i] = wv
+            return {"weights": w}
 
     def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
         w = state["weights"]
         with self._lock:
-            self._weights = w.copy()
             self._index = make_engine(
                 self.engine_name,
-                {i: float(max(w[i], self.min_weight)) for i in range(len(w))},
+                {i: float(max(w[i], self.min_weight)) for i in range(len(w))
+                 if w[i] > 0.0},
                 c=self._index.c, seed=self.seed)
 
 

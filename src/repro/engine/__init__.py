@@ -12,6 +12,7 @@ One protocol (``SamplerEngine``), one registry, interchangeable backends:
   host-brute     host   ``core.BruteForcePPS`` (O(n) query, O(1) update)
   jax-flat       device ``core.jax_sampler.pps_sample_indices``
   jax-bucketed   device ``DynamicBucketedIndex`` over ``BucketedIndex``
+  jax-sharded    device slot-sharded bucketed sampler (``shard_map``)
   pallas-mask    device fused Pallas kernel (interpret mode off-TPU)
   ============== ====== ==================================================
 
@@ -65,6 +66,8 @@ register_engine(
 # so device backends register unconditionally.
 from .device import BucketedJaxEngine, FlatJaxEngine, PallasMaskEngine
 from .dynamic_bucketed import DynamicBucketedIndex
+from .sharded import ShardedBucketedEngine
+from .spec import SnapshotSpec, size_class, spec_for
 
 register_engine(
     "jax-flat", "device", FlatJaxEngine,
@@ -73,6 +76,11 @@ register_engine(
 register_engine(
     "jax-bucketed", "device", BucketedJaxEngine,
     description="dynamic bucketed index: Theta(B*b*c) candidates, batched",
+)
+register_engine(
+    "jax-sharded", "device", ShardedBucketedEngine,
+    description="slot-sharded bucketed sampler: shard_map per-shard draws, "
+                "one psum for the global total",
 )
 register_engine(
     "pallas-mask", "device", PallasMaskEngine,
@@ -97,5 +105,9 @@ __all__ = [
     "FlatJaxEngine",
     "BucketedJaxEngine",
     "PallasMaskEngine",
+    "ShardedBucketedEngine",
     "DynamicBucketedIndex",
+    "SnapshotSpec",
+    "size_class",
+    "spec_for",
 ]

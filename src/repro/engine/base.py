@@ -101,6 +101,11 @@ class SamplerEngine(abc.ABC):
     #: True when a single update forces an O(n) rebuild (SS-reduction
     #: baselines); benchmarks scale update counts down for these.
     UPDATE_REBUILDS: bool = False
+    #: Number of XLA programs this engine has caused to compile (device
+    #: engines count program-signature misses; host engines compile
+    #: nothing, so the protocol-level answer is 0).  bench_churn and the
+    #: CI perf gate read this uniformly across backends.
+    compile_cache_misses: int = 0
 
     def __init__(self, items: Optional[Dict[Key, float]] = None, c: float = 1.0) -> None:
         if not (0.0 < c <= 1.0):

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from ..core.jax_sampler import mask_to_indices, pps_sample_indices
 from ..core.pps import Key
 from ..kernels.pps_sample.ops import pps_sample_mask
+from . import spec as spec_mod
 from .base import SamplerEngine
 from .dynamic_bucketed import DynamicBucketedIndex
 
@@ -45,6 +46,8 @@ class DeviceEngine(SamplerEngine):
     ) -> None:
         super().__init__(items, c=c)
         self._rng = np.random.default_rng(seed)
+        self._program_signatures: set = set()
+        self.compile_cache_misses = 0
         cap = max(self._slots.capacity, 1)
         self._wnp = np.zeros(cap, np.float64)
         for k, w in self._weights.items():
@@ -53,6 +56,21 @@ class DeviceEngine(SamplerEngine):
 
     def _post_init(self) -> None:  # backends override
         pass
+
+    # -- compile-cache accounting ---------------------------------------------
+    def _note_program(self, sig: tuple) -> None:
+        """Record one device-program launch.
+
+        ``sig`` must contain exactly the compile-relevant facts (program
+        name + static shapes); a signature not seen before means XLA had
+        to trace and compile, so ``compile_cache_misses`` counts the
+        recompiles a workload pays.  Size-class padding (engine/spec.py)
+        exists precisely so steady-state churn keeps this flat after
+        warmup -- benchmarks/bench_paper.py:bench_churn asserts it.
+        """
+        if sig not in self._program_signatures:
+            self._program_signatures.add(sig)
+            self.compile_cache_misses += 1
 
     # -- dense array upkeep ---------------------------------------------------
     def _set_slot(self, slot: int, w: float) -> None:
@@ -91,7 +109,10 @@ class DeviceEngine(SamplerEngine):
 class DenseMirrorEngine(DeviceEngine):
     """Device engines whose snapshot is just the dense weight vector,
     mirrored to the device lazily (any update invalidates, the next query
-    resyncs once)."""
+    resyncs once).  The mirror is zero-padded to its power-of-two size
+    class (engine/spec.py): weight 0 means inclusion probability exactly
+    0, so padding is free, and slot-array growth inside one class reuses
+    the compiled program."""
 
     def _post_init(self) -> None:
         self._dev: Optional[jax.Array] = None
@@ -102,7 +123,10 @@ class DenseMirrorEngine(DeviceEngine):
 
     def _device_weights(self) -> jax.Array:
         if self._dev is None:
-            self._dev = jnp.asarray(self._wnp, jnp.float32)
+            n_pad = spec_mod.size_class(self._wnp.size, spec_mod.MIN_N_PAD)
+            padded = np.zeros(n_pad, np.float32)
+            padded[: self._wnp.size] = self._wnp
+            self._dev = jnp.asarray(padded)
         return self._dev
 
 
@@ -110,8 +134,9 @@ class FlatJaxEngine(DenseMirrorEngine):
     def query_batch(
         self, key, batch: int, cap: int = 64
     ) -> Tuple[np.ndarray, np.ndarray]:
-        ids, cnt = pps_sample_indices(
-            key, self._device_weights(), self.c, batch=batch, cap=cap)
+        w = self._device_weights()
+        self._note_program(("pps_sample_indices", w.shape[0], batch, cap))
+        ids, cnt = pps_sample_indices(key, w, self.c, batch=batch, cap=cap)
         return np.asarray(ids), np.asarray(cnt)
 
 
@@ -125,7 +150,8 @@ class BucketedJaxEngine(DeviceEngine):
         super().__init__(items, c=c, seed=seed)
 
     def _post_init(self) -> None:
-        self._dbi = DynamicBucketedIndex(self._wnp, **self._dbi_opts)
+        self._dbi = DynamicBucketedIndex(
+            self._wnp, on_program=self._note_program, **self._dbi_opts)
         del self._wnp  # single source of truth is _dbi._w from here on
 
     def _insert_slot(self, slot: int, key: Key, w: float) -> None:
@@ -166,8 +192,10 @@ class PallasMaskEngine(DenseMirrorEngine):
     def query_batch(
         self, key, batch: int, cap: int = 64
     ) -> Tuple[np.ndarray, np.ndarray]:
+        w = self._device_weights()
+        self._note_program(("pps_sample_mask", w.shape[0], batch, cap))
         mask = pps_sample_mask(
-            key, self._device_weights(), self.c, batch=batch,
+            key, w, self.c, batch=batch,
             fused_rng=self._fused, interpret=self._interpret,
         )
         ids, counts = mask_to_indices(mask.astype(bool), cap=cap)

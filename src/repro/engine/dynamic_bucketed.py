@@ -27,11 +27,19 @@ Algorithm 4:
 
 Slots with weight 0 are simply absent from the snapshot, which lets the
 engine layer recycle slots without index knowledge.
+
+Snapshots are built at ``SnapshotSpec`` size classes (``engine.spec``):
+the element and bucket axes are padded to powers of two, so every rebuild
+whose live sizes stay inside the current class reuses the compiled
+``bucketed_sample``/``bucketed_change_w_at`` programs -- steady-state
+churn runs recompile-free.  Every device-program launch is reported
+through ``on_program`` (signature = program name + compile-relevant
+shapes) so the engine layer can count compile-cache misses.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -46,14 +54,22 @@ from ..core.jax_index import (
     build_bucketed_index,
     marginal_probs,
 )
+from .spec import SnapshotSpec, spec_for
 
 
 class DynamicBucketedIndex:
     """Bounded delta buffer over a rebuilt ``BucketedIndex`` snapshot."""
 
-    def __init__(self, weights: np.ndarray, b: int = 4) -> None:
+    def __init__(
+        self,
+        weights: np.ndarray,
+        b: int = 4,
+        on_program: Optional[Callable[[tuple], None]] = None,
+    ) -> None:
         self.b = b
         self._w = np.asarray(weights, np.float64).copy()
+        self._on_program = on_program or (lambda sig: None)
+        self.spec: Optional[SnapshotSpec] = None
         self.rebuild_count = -1  # the initial build is not an amortized cost
         self._rebuild()
 
@@ -66,10 +82,13 @@ class DynamicBucketedIndex:
         self._lut = np.append(self._live_slots, np.int32(self._w.size))
         self._slot_to_compact = {int(s): i for i, s in enumerate(live)}
         if live.size:
+            buckets = bucket_ids(self._w[live], self.b)
+            self.spec = spec_for(live.size, np.unique(buckets).size, self.b)
             self.index: Optional[BucketedIndex] = build_bucketed_index(
-                self._w[live], b=self.b
+                self._w[live], b=self.b,
+                n_pad=self.spec.n_pad, m_pad=self.spec.m_pad, j=buckets,
             )
-            self._bucket_at_build = bucket_ids(self._w[live], self.b)
+            self._bucket_at_build = buckets
             # compact-id -> sorted-position inverse, cached so each delta
             # flush is an O(k) positional scatter instead of an O(n) invert
             ids = np.asarray(self.index.sorted_ids)
@@ -78,6 +97,7 @@ class DynamicBucketedIndex:
             self._compact_to_pos = inv
         else:
             self.index = None
+            self.spec = None
             self._bucket_at_build = np.zeros(0, np.int64)
             self._compact_to_pos = np.zeros(0, np.int32)
         self._n_live = int(live.size)
@@ -152,6 +172,8 @@ class DynamicBucketedIndex:
         # One O(k) positional scatter for the whole delta batch.  (Distinct
         # delta sizes jit separate scatter programs; steady-state loops
         # flush a constant-size batch, so this caches after one step.)
+        self._on_program(
+            ("bucketed_change_w_at", self.spec.shape_class, int(pos.size)))
         new_index, ok = bucketed_change_w_at(
             self.index, jnp.asarray(pos), jnp.asarray(ws, jnp.float32)
         )
@@ -182,6 +204,8 @@ class DynamicBucketedIndex:
                 np.full((batch, cap), int(self._w.size), np.int32),
                 np.zeros(batch, np.int32),
             )
+        self._on_program(
+            ("bucketed_sample", self.spec.shape_class, batch, cap))
         ids, cnt = bucketed_sample(key, self.index, c, batch=batch, cap=cap)
         # zero-weight inserts grow _w without a rebuild; keep the padding
         # sentinel >= every live slot count (O(1), the rest of lut is valid)
@@ -203,5 +227,8 @@ class DynamicBucketedIndex:
         self.flush()
         out = np.zeros(self._w.size, np.float64)
         if self.index is not None:
-            out[self._live_slots] = np.asarray(marginal_probs(self.index, c))
+            # marginal_probs is padded to n_pad; padded compact ids carry
+            # exactly 0, the live prefix maps back through the slot lut
+            probs = np.asarray(marginal_probs(self.index, c))
+            out[self._live_slots] = probs[: self._live_slots.size]
         return out

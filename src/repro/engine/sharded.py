@@ -1,0 +1,224 @@
+"""jax-sharded: slot-partitioned bucketed sampling across a device mesh.
+
+A single-HBM dense slot vector caps pool size; this engine removes the
+wall by partitioning *slots* across the mesh (``sharding.slot_mesh``) and
+running the bucketed candidate draw per shard under ``shard_map``:
+
+  1. Live slots are dealt round-robin onto the ``D`` mesh devices, and
+     each shard builds its own padded ``BucketedIndex`` over its local
+     weights -- all shards share one ``SnapshotSpec`` size class, so the
+     per-shard arrays stack into ``(D, ...)`` tensors sharded on the
+     leading axis and every rebuild inside the class reuses one compiled
+     program (counted by ``DeviceEngine.compile_cache_misses``).
+  2. Inside ``shard_map`` each device draws its local Poisson candidates
+     exactly as ``bucketed_sample`` does, except the acceptance target
+     ``p_v = c*w_v/W`` uses the *global* total obtained with ONE ``psum``
+     -- inclusion events are independent per element, and the shards hold
+     disjoint elements, so the union over shards is exactly the Poisson
+     pi-ps law of the whole pool.
+  3. Per-shard results map through a local->global slot lut on device,
+     then the ``(D, B, cap)`` candidates are gather-compacted into the
+     engine's standard padded ``(ids[B, cap], counts[B])`` contract (the
+     shard axis folds into the cap axis and one sort per row pushes the
+     sentinel padding right).
+
+Dynamic updates follow the same amortization as the rest of the device
+path: O(1) host-side writes mark the snapshot dirty, and a burst of U
+updates costs one sharded rebuild at the next query.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.jax_index import (
+    BucketedIndex,
+    bucket_ids,
+    bucketed_sample,
+    build_bucketed_index,
+)
+from ..core.pps import Key
+from ..sharding import slot_mesh
+from .device import DeviceEngine
+from .spec import MIN_M_PAD, MIN_N_PAD, SnapshotSpec, size_class
+
+
+@functools.partial(
+    jax.jit, static_argnames=("batch", "cap", "mesh", "axis", "b"))
+def _sharded_sample(
+    key: jax.Array,
+    stacked: Tuple[jax.Array, ...],  # 7 BucketedIndex fields, leading dim D
+    lut: jax.Array,                  # (D, n_pad + 1) local compact -> global slot
+    c: float,
+    *,
+    batch: int,
+    cap: int,
+    mesh: Mesh,
+    axis: str,
+    b: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """One device program: per-shard bucketed draws + psum + compaction."""
+
+    def body(sw, sid, bstart, bcount, bwbar, blo, btot, lut_s):
+        # each arg arrives as the (1, ...) block of this shard
+        local = BucketedIndex(
+            sorted_weights=sw[0], sorted_ids=sid[0], bucket_start=bstart[0],
+            bucket_count=bcount[0], bucket_wbar=bwbar[0], bucket_lo=blo[0],
+            # ONE collective: the global total that turns local weights
+            # into globally correct inclusion probabilities c*w/W
+            total=jax.lax.psum(btot[0], axis), b=b,
+        )
+        shard = jax.lax.axis_index(axis)
+        ids, cnt = bucketed_sample(
+            jax.random.fold_in(key, shard), local, c, batch=batch, cap=cap)
+        # local compact ids (sentinel n_pad included) -> global slot ids
+        return lut_s[0][ids][None], cnt[None]
+
+    ids, cnt = shard_map(
+        body, mesh=mesh,
+        in_specs=tuple([P(axis)] * 8),
+        out_specs=(P(axis), P(axis)),
+        check_rep=False,
+    )(*stacked, lut)
+
+    # gather-compact: fold the shard axis into the candidate axis; every
+    # entry is a live global slot id or the sentinel (> every live id),
+    # so one sort per row pushes real ids left and padding right
+    flat = jnp.transpose(ids, (1, 0, 2)).reshape(batch, -1)
+    compact = jnp.sort(flat, axis=1)[:, :cap]
+    counts = jnp.minimum(jnp.sum(cnt, axis=0), cap).astype(jnp.int32)
+    return compact.astype(jnp.int32), counts
+
+
+def _empty_shard_index(n_pad: int, m_pad: int, b: int) -> BucketedIndex:
+    """All-padding shard (more devices than live slots): every bucket has
+    count 0, so the shard contributes zero candidates and zero total."""
+    return BucketedIndex(
+        sorted_weights=jnp.zeros(n_pad, jnp.float32),
+        sorted_ids=jnp.arange(n_pad, dtype=jnp.int32),
+        bucket_start=jnp.zeros(m_pad, jnp.int32),
+        bucket_count=jnp.zeros(m_pad, jnp.int32),
+        bucket_wbar=jnp.ones(m_pad, jnp.float32),
+        bucket_lo=jnp.ones(m_pad, jnp.float32),
+        total=jnp.asarray(0.0, jnp.float32),
+        b=b,
+    )
+
+
+class ShardedBucketedEngine(DeviceEngine):
+    """Slot-sharded dynamic engine (see module docstring)."""
+
+    def __init__(
+        self,
+        items: Optional[Dict[Key, float]] = None,
+        c: float = 1.0,
+        seed: Optional[int] = None,
+        b: int = 4,
+        mesh: Optional[Mesh] = None,
+    ) -> None:
+        self.b = b
+        self._mesh = mesh if mesh is not None else slot_mesh()
+        self._axis = self._mesh.axis_names[0]
+        self._num_shards = int(np.prod(self._mesh.devices.shape))
+        super().__init__(items, c=c, seed=seed)
+
+    def _post_init(self) -> None:
+        self._snap: Optional[Tuple] = None
+        self.rebuild_count = -1  # the initial build is not an amortized cost
+        self.spec: Optional[SnapshotSpec] = None
+
+    def _set_slot(self, slot: int, w: float) -> None:
+        super()._set_slot(slot, w)
+        self._snap = None  # O(1) mark; one rebuild at the next query
+
+    # -- sharded snapshot ------------------------------------------------------
+    def _shard_assignment(self, live: np.ndarray) -> list:
+        """Deal live slots round-robin -> shard loads differ by <= 1."""
+        return [live[s :: self._num_shards] for s in range(self._num_shards)]
+
+    def _rebuild(self) -> None:
+        live = np.nonzero(self._wnp > 0.0)[0].astype(np.int32)
+        self.rebuild_count += 1
+        if live.size == 0:
+            self._snap = None
+            self.spec = None
+            self._has_live = False
+            return
+        self._has_live = True
+        parts = self._shard_assignment(live)
+        # one size class for all shards: the stacked (D, ...) arrays must
+        # be rectangular, and a shared class means a rebuild only changes
+        # the program when the *largest* shard crosses a class boundary
+        js = [bucket_ids(self._wnp[p], self.b) if p.size else None
+              for p in parts]
+        m_reals = [len(np.unique(j)) if j is not None else 0 for j in js]
+        n_pad = size_class(max(p.size for p in parts), MIN_N_PAD)
+        m_pad = size_class(max(m_reals), MIN_M_PAD)
+        built = [
+            build_bucketed_index(
+                self._wnp[p], b=self.b, n_pad=n_pad, m_pad=m_pad, j=j)
+            if p.size
+            else _empty_shard_index(n_pad, m_pad, self.b)
+            for p, j in zip(parts, js)
+        ]
+        self.spec = SnapshotSpec(
+            n_live=int(live.size), n_pad=n_pad,
+            m_real=max(m_reals), m_pad=m_pad, b=self.b)
+
+        sentinel = np.int32(self._wnp.size)
+        luts = np.full((self._num_shards, n_pad + 1), sentinel, np.int32)
+        for s, p in enumerate(parts):
+            luts[s, : p.size] = p
+
+        shard_spec = NamedSharding(self._mesh, P(self._axis))
+        stacked = tuple(
+            jax.device_put(
+                jnp.stack([getattr(idx, f) for idx in built]), shard_spec)
+            for f in ("sorted_weights", "sorted_ids", "bucket_start",
+                      "bucket_count", "bucket_wbar", "bucket_lo", "total")
+        )
+        lut = jax.device_put(jnp.asarray(luts), shard_spec)
+        self._snap = (stacked, lut, int(sentinel))
+
+    # -- queries ---------------------------------------------------------------
+    def query_batch(
+        self, key, batch: int, cap: int = 64
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        if self._snap is None:
+            self._rebuild()
+        if not self._has_live:
+            return (
+                np.full((batch, cap), self._wnp.size, np.int32),
+                np.zeros(batch, np.int32),
+            )
+        stacked, lut, sentinel = self._snap
+        self._note_program(
+            ("sharded_sample", self._num_shards, self.spec.shape_class,
+             batch, cap))
+        ids, cnt = _sharded_sample(
+            key, stacked, lut, self.c,
+            batch=batch, cap=cap, mesh=self._mesh, axis=self._axis, b=self.b)
+        return np.asarray(ids), np.asarray(cnt)
+
+    # -- introspection ---------------------------------------------------------
+    def mesh_layout(self) -> Dict[str, object]:
+        """Human-readable shard layout (quickstart example, debugging)."""
+        if self._snap is None:
+            self._rebuild()
+        live = np.nonzero(self._wnp > 0.0)[0]
+        per_shard = [int(p.size) for p in self._shard_assignment(live)]
+        return {
+            "axis": self._axis,
+            "num_shards": self._num_shards,
+            "devices": [str(d) for d in self._mesh.devices.reshape(-1)],
+            "live_slots_per_shard": per_shard,
+            "size_class": None if self.spec is None else self.spec.shape_class,
+        }

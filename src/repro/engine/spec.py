@@ -1,0 +1,86 @@
+"""SnapshotSpec: static-shape size classes for device snapshots.
+
+``core.jax_index.bucketed_sample`` (and every other jitted program over a
+``BucketedIndex``) specializes on the array shapes ``(n, m)`` of the
+snapshot.  A dynamic workload changes the live size on every structural
+rebuild, so without intervention steady-state churn retraces and
+recompiles XLA programs where the paper's index pays microseconds --
+the O(1)-update claim dies in the compile queue.
+
+The fix is the device-native analogue of the paper's structural
+partitioning: quantize every snapshot build to a *size class*.  A
+``SnapshotSpec`` records the live sizes (``n_live``, ``m_real``) and the
+power-of-two padded sizes (``n_pad``, ``m_pad``) the arrays are built at.
+Padding is probability-exact by construction:
+
+  * padded element slots carry weight 0 and live in padded buckets whose
+    ``bucket_count`` is 0, so the Poisson candidate rate of every padded
+    bucket is ``count * mu = 0`` -- a padded id can never be drawn;
+  * padded bucket bounds are positive (they repeat the last real bound)
+    so the thinning ratio ``log1p(-p)/(-mu)`` stays finite even for the
+    clamped out-of-range candidate slots of invalid lanes;
+  * totals are true sums -- zero weights add nothing.
+
+Any sequence of rebuilds whose live sizes stay inside one size class
+therefore reuses one compiled program per (batch, cap) shape; the
+``DeviceEngine.compile_cache_misses`` counter observes exactly the
+class/shape transitions.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+#: Smallest padded sizes; tiny pools all land in one class instead of
+#: recompiling through 1, 2, 4, ... as they warm up.
+MIN_N_PAD = 64
+MIN_M_PAD = 8
+
+
+def size_class(x: int, floor: int) -> int:
+    """Smallest power of two >= max(x, floor)."""
+    c = max(int(floor), 1)
+    x = int(x)
+    while c < x:
+        c <<= 1
+    return c
+
+
+class SnapshotSpec(NamedTuple):
+    """Shape contract of one padded device snapshot."""
+
+    n_live: int  # live elements actually present
+    n_pad: int   # element-axis length the arrays are built at (pow2)
+    m_real: int  # occupied weight buckets
+    m_pad: int   # bucket-axis length the arrays are built at (pow2)
+    b: int       # bucket base (weight ratio per bucket)
+
+    @property
+    def shape_class(self) -> Tuple[int, int, int]:
+        """The compile-relevant part: two snapshots with equal
+        ``shape_class`` lower to byte-identical programs."""
+        return (self.n_pad, self.m_pad, self.b)
+
+    def holds(self, n_live: int, m_real: int) -> bool:
+        """Would a rebuild at (n_live, m_real) stay in this class?"""
+        return n_live <= self.n_pad and m_real <= self.m_pad
+
+
+def spec_for(
+    n_live: int,
+    m_real: int,
+    b: int,
+    *,
+    min_n: int = MIN_N_PAD,
+    min_m: int = MIN_M_PAD,
+) -> SnapshotSpec:
+    """Quantize live sizes up to their power-of-two size class."""
+    return SnapshotSpec(
+        n_live=int(n_live),
+        n_pad=size_class(n_live, min_n),
+        m_real=int(m_real),
+        m_pad=size_class(m_real, min_m),
+        b=int(b),
+    )
+
+

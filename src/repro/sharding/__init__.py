@@ -1,5 +1,6 @@
 """Sharding layer: logical-axis rules and mesh helpers."""
 
+from .context import SLOT_AXIS, activation_mesh, current_mesh, slot_mesh
 from .rules import (
     AXIS_MAP,
     DEFAULT_RULES,
@@ -12,6 +13,10 @@ from .rules import (
 )
 
 __all__ = [
+    "SLOT_AXIS",
+    "activation_mesh",
+    "current_mesh",
+    "slot_mesh",
     "AXIS_MAP",
     "DEFAULT_RULES",
     "batch_shardings",

@@ -14,9 +14,31 @@ import threading
 from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _STATE = threading.local()
+
+#: axis name used by 1-D slot/pool meshes (engine/sharded.py)
+SLOT_AXIS = "shard"
+
+
+def slot_mesh(axis: str = SLOT_AXIS) -> Mesh:
+    """1-D mesh over every device of the active mesh (or all local devices).
+
+    The sharded sampler engine partitions *slots*, not activations, so it
+    flattens whatever mesh the launcher entered into a single named axis;
+    outside any mesh context it spans ``jax.devices()``.  On a one-device
+    host this degenerates to a 1-device mesh -- the same program text
+    runs unchanged, which is what the CPU agreement tests exercise.
+    """
+    mesh = current_mesh()
+    devs = (
+        mesh.devices.reshape(-1)
+        if mesh is not None
+        else np.asarray(jax.devices())
+    )
+    return Mesh(devs.reshape(-1), (axis,))
 
 
 def current_mesh() -> Optional[Mesh]:

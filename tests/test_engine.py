@@ -9,6 +9,9 @@ The load-bearing guarantees:
   * the padded (ids, counts) contract is uniform across backends.
 """
 
+import subprocess
+import sys
+
 import jax
 import numpy as np
 import pytest
@@ -16,15 +19,19 @@ import pytest
 from repro.core.jax_index import (
     bucketed_change_w,
     bucketed_change_w_batch,
+    bucketed_sample,
     build_bucketed_index,
     marginal_probs,
 )
 from repro.engine import (
     BucketedJaxEngine,
+    ShardedBucketedEngine,
     available_engines,
     engine_kind,
     get_spec,
     make_engine,
+    size_class,
+    spec_for,
 )
 
 ALL = available_engines()
@@ -39,9 +46,10 @@ def lognormal_items(n, seed=0, sigma=2.0):
 
 def test_registry_exposes_all_backends():
     assert len(ALL) >= 4
-    assert {"host-dips", "jax-flat", "jax-bucketed", "pallas-mask"} <= set(ALL)
+    assert {"host-dips", "jax-flat", "jax-bucketed", "jax-sharded",
+            "pallas-mask"} <= set(ALL)
     assert len(available_engines(kind="host")) >= 4
-    assert len(available_engines(kind="device")) >= 3
+    assert len(available_engines(kind="device")) >= 4
 
 
 def test_registry_aliases_resolve_legacy_names():
@@ -99,8 +107,12 @@ def test_bucketed_query_batch_marginals_match_snapshot():
     counts = np.bincount(ids.ravel(), minlength=e.pad_id + 1)
     emp = counts[: len(items)] / B
     truth = e.marginals()[: len(items)]
+    # the snapshot is padded to its size class: the live prefix carries
+    # the exact marginals, the padded tail exactly 0
     snap = np.asarray(marginal_probs(e._dbi.index, 0.8))
-    assert np.abs(truth[e._dbi._live_slots] - snap).max() < 1e-6
+    n_live = e._dbi.spec.n_live
+    assert np.abs(truth[e._dbi._live_slots] - snap[:n_live]).max() < 1e-6
+    assert np.all(snap[n_live:] == 0.0)
     assert np.abs(emp - truth).max() < 0.012
     assert float(cnt.mean()) == pytest.approx(0.8, abs=0.03)
 
@@ -251,3 +263,169 @@ def test_bucketed_change_w_batch_refuses_out_of_bucket():
         idx, np.asarray([1, 2], np.int32), np.asarray([100.0, 12.0], np.float32))
     assert not bool(ok[0]) and bool(ok[1])
     assert float(got.total) == pytest.approx(w.sum() + 2.0, rel=1e-5)
+
+
+# ------------------------ padded-shape (SnapshotSpec) semantics -----------------
+
+def test_snapshot_spec_size_classes():
+    s = spec_for(400, 11, 4)
+    assert (s.n_pad, s.m_pad) == (512, 16)
+    assert s.holds(512, 16) and not s.holds(513, 16) and not s.holds(1, 17)
+    assert size_class(0, 64) == 64 and size_class(65, 64) == 128
+    # two specs in the same class compile to the same program shapes
+    assert spec_for(300, 9, 4).shape_class == s.shape_class
+
+
+def test_padded_index_padding_probability_exactly_zero():
+    w = np.random.default_rng(2).lognormal(0, 2, 100)
+    idx = build_bucketed_index(w, b=4, n_pad=128, m_pad=16)
+    assert idx.sorted_weights.shape == (128,) and idx.bucket_start.shape == (16,)
+    probs = np.asarray(marginal_probs(idx, 0.9))
+    assert np.all(probs[100:] == 0.0)          # padding: exactly 0
+    assert probs.sum() == pytest.approx(0.9, rel=1e-4)
+    # padded compact ids are never drawn, only live ids and the sentinel
+    ids, _ = bucketed_sample(jax.random.key(0), idx, 0.9, batch=20_000, cap=32)
+    ids = np.asarray(ids)
+    assert not np.any((ids >= 100) & (ids < 128))
+    assert float(np.abs(
+        np.bincount(ids.ravel(), minlength=129)[:100] / 20_000 - probs[:100]
+    ).max()) < 0.012
+
+
+@pytest.mark.parametrize("name", ["jax-bucketed", "jax-sharded"])
+def test_sentinels_never_leak_across_size_class_boundaries(name):
+    """Grow the pool across a size-class boundary and shrink back: every
+    returned id decodes to a live key, padding stays >= pad_id, at every
+    class the engine visits."""
+    e = make_engine(name, lognormal_items(60, seed=4), c=1.0, seed=0)
+
+    def check():
+        ids, counts = e.query_batch(jax.random.key(len(e)), 50, cap=16)
+        for row, cnt in zip(ids, counts):
+            assert np.all(row[:cnt] < e.pad_id)
+            assert np.all(row[cnt:] >= len(e))
+        for ks in e.decode_batch(ids, counts):
+            assert all(k in e for k in ks)
+
+    check()                                   # class n_pad=64
+    for i in range(40):
+        e.insert(("grow", i), 2.0 ** (i % 6))
+    check()                                   # crossed into n_pad=128
+    for i in range(40):
+        e.delete(("grow", i))
+    check()                                   # back to n_pad=64
+
+
+@pytest.mark.parametrize("name", ["jax-bucketed", "jax-sharded"])
+def test_churn_burst_within_size_class_zero_recompiles(name):
+    """Acceptance: after warmup, a mixed burst of 1k updates + samples
+    inside one size class adds NO compiled programs -- counter-verified
+    against both the engine's own accounting and jax's jit cache."""
+    # mid-bucket weights: bucket j of b=4 is (4^j, 4^{j+1}]; 2*4^j sits at
+    # the center so the 3*4^j nudge below is in-bucket by construction
+    items = {i: 2.0 * 4.0 ** (i % 5) for i in range(600)}
+    e = make_engine(name, dict(items), c=1.0, seed=0)
+    jit_cache = (
+        _sharded_jit_cache_size if name == "jax-sharded"
+        else bucketed_sample._cache_size
+    )
+
+    def spec():
+        return e.spec if name == "jax-sharded" else e._dbi.spec
+
+    def round_trip(r: int, structural: bool) -> None:
+        # fixed-size in-bucket batch, optionally a structural pair, then
+        # a sample: the op mix of a steady-state serving loop
+        if structural:
+            e.insert(("churn", r), 2.0 * 4.0 ** (r % 5))
+            e.delete(("churn", r))
+        for i in range(8):
+            s = (r * 8 + i) % 600
+            e.change_w(s, (2.0 if r % 2 else 3.0) * 4.0 ** (s % 5))
+        e.query_batch(jax.random.key(r), 32, cap=16)
+
+    round_trip(0, True)   # warmup: rebuild path + sample program
+    round_trip(1, False)  # warmup: pure in-bucket scatter shape
+    misses0, cache0, spec0 = e.compile_cache_misses, jit_cache(), spec()
+    n_ops = 0
+    r = 2
+    while n_ops < 1000:
+        round_trip(r, structural=bool(r % 2))
+        n_ops += 10
+        r += 1
+    assert e.compile_cache_misses == misses0
+    assert jit_cache() == cache0
+    # the burst stayed inside one size class: identical padded shapes
+    assert spec().shape_class == spec0.shape_class
+
+
+def _sharded_jit_cache_size() -> int:
+    from repro.engine.sharded import _sharded_sample
+
+    return _sharded_sample._cache_size()
+
+
+# ------------------------------ jax-sharded ----------------------------------
+
+def test_sharded_marginals_match_host_on_one_device_mesh():
+    """jax-sharded empirics agree with the analytic law and with
+    jax-bucketed on the same instance (1-device mesh degenerate case)."""
+    items = lognormal_items(300, seed=9, sigma=2.5)
+    e = make_engine("jax-sharded", dict(items), c=0.8, seed=0)
+    assert e.mesh_layout()["num_shards"] == len(jax.devices())
+    B = 60_000
+    ids, cnt = e.query_batch(jax.random.key(11), B, cap=64)
+    emp = np.bincount(ids.ravel(), minlength=e.pad_id + 1)[:300] / B
+    W = sum(items.values())
+    truth = np.asarray([min(1.0, 0.8 * items[i] / W) for i in range(300)])
+    assert np.abs(emp - truth).max() < 0.012
+    assert float(cnt.mean()) == pytest.approx(0.8, abs=0.03)
+    dev = make_engine("jax-bucketed", dict(items), c=0.8, seed=0)
+    # bucketed marginals read the f32 device snapshot, sharded marginals
+    # the f64 logical array: agreement up to f32 rounding
+    assert np.abs(dev.marginals()[:300] - e.marginals()[:300]).max() < 1e-6
+
+
+def test_sharded_empty_pool_returns_padding_only():
+    e = make_engine("jax-sharded", {0: 1.0, 1: 2.0}, c=1.0, seed=0)
+    e.delete(0), e.delete(1)
+    ids, counts = e.query_batch(jax.random.key(0), 8, cap=4)
+    assert np.all(counts == 0) and np.all(ids >= e.pad_id)
+    e.insert("back", 3.0)  # sole live element, c=1 => sampled every time
+    decoded = e.decode_batch(*e.query_batch(jax.random.key(1), 200, cap=4))
+    assert sum(ks.count("back") for ks in decoded) > 150
+
+
+def test_sharded_agrees_on_forced_multi_device_mesh():
+    """Statistical agreement on a real 4-shard mesh (forced host devices;
+    needs a fresh process because XLA device count is fixed at init)."""
+    code = """
+import numpy as np, jax
+assert len(jax.devices()) == 4
+from repro.engine import make_engine
+w = np.random.default_rng(3).lognormal(0, 2.5, 500)
+items = {i: float(x) for i, x in enumerate(w)}
+e = make_engine("jax-sharded", dict(items), c=0.9, seed=0)
+assert e.mesh_layout()["num_shards"] == 4
+B = 60_000
+ids, cnt = e.query_batch(jax.random.key(7), B, cap=64)
+emp = np.bincount(ids.ravel(), minlength=e.pad_id + 1)[:500] / B
+truth = e.marginals()[:500]
+assert np.abs(emp - truth).max() < 0.012, np.abs(emp - truth).max()
+e.insert("a", 123.0); e.delete(0); e.change_w(2, float(w[2]) * 100)
+ids, cnt = e.query_batch(jax.random.key(9), B, cap=64)
+emp_a = float((ids == e._slots.slot("a")).sum()) / B
+assert abs(emp_a - e.inclusion_probability("a")) < 0.01
+assert e.compile_cache_misses == 1   # churn stayed inside the size class
+print("OK")
+"""
+    import os
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(root, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
